@@ -1,0 +1,17 @@
+"""Benchmark helpers: timing + CSV emit (`name,us_per_call,derived`)."""
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # us
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us if us is None else round(us, 2)},{derived}", flush=True)

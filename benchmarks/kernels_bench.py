@@ -1,0 +1,37 @@
+"""Kernel microbenchmarks (§4 layer computation): Pallas kernels in interpret
+mode vs their XLA oracles on CPU. Wall times here measure the *oracle* (XLA)
+path meaningfully; interpret-mode kernel numbers are correctness artifacts —
+real kernel perf requires a TPU (DESIGN.md §5)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.flash_attention import attention_ref
+from repro.kernels.matmul import matmul_ref
+from repro.models import attention as A
+
+
+def main():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (512, 512), jnp.float32)
+    b = jax.random.normal(k2, (512, 512), jnp.float32)
+    us, _ = time_fn(jax.jit(matmul_ref), a, b)
+    flops = 2 * 512 ** 3
+    emit("kernels/matmul_ref_512", us, f"gflops={flops / us / 1e3:.2f}")
+
+    B, S, H, hd = 1, 1024, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B * H, S, hd)) for kk in ks)
+    us, _ = time_fn(jax.jit(lambda *t: attention_ref(*t, causal=True)), q, k, v)
+    emit("kernels/attention_ref_1k", us, "materialized scores")
+
+    qb, kb, vb = (t.reshape(B, H, S, hd).transpose(0, 2, 1, 3) for t in (q, k, v))
+    chunked = jax.jit(lambda q_, k_, v_: A._chunked_attention(
+        q_, k_, v_, n_rep=1, scale=hd ** -0.5, chunk=128, window=None))
+    us2, _ = time_fn(chunked, qb, kb, vb)
+    emit("kernels/attention_chunked_1k", us2,
+         f"flash-style XLA path, vs_naive={us / us2:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Deliverable (g): roofline table from the dry-run sweep artifacts
+(results/dryrun/*.json). derived = three terms + dominant + useful-FLOP
+ratio per (arch × shape × mesh × plan)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main():
+    files = sorted(glob.glob("results/dryrun/*.json"))
+    if not files:
+        emit("roofline/none", None, "run `python -m repro.launch.sweep` first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('plan','?')}"
+        if r["status"] == "skipped":
+            emit(key, None, "skipped: " + r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(key, None, "ERROR")
+            continue
+        t = r["roofline"]
+        emit(key, None,
+             f"compute={t['compute_s']:.3f}s memory={t['memory_s']:.3f}s "
+             f"collective={t['collective_s']:.3f}s dom={r['dominant']} "
+             f"useful={r['useful_flops_ratio']:.2f} fits={r['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    main()

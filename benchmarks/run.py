@@ -1,0 +1,38 @@
+"""Benchmark harness (deliverable (d)): one module per paper table/figure.
+Prints `name,us_per_call,derived` CSV rows."""
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table3_update_rules",     # Table 3: weight update rules
+    "benchmarks.table4_workdepth",        # Table 4: layer W-D
+    "benchmarks.table5_networks",         # Table 5 + §3.3.1 LeNet claim
+    "benchmarks.table6_conv_algorithms",  # Table 6: conv algorithm W-D
+    "benchmarks.fig6_collectives",        # Fig 6 / §2.5: allreduce algorithms
+    "benchmarks.fig7_minibatch",          # Fig 7: minibatch-size effect
+    "benchmarks.consistency_spectrum",    # §6.1 / Fig 28: staleness spectrum
+    "benchmarks.compression_ratios",      # §6.3: quantization/sparsification
+    "benchmarks.sec4_conv_measured",      # §4.3: conv algorithms, measured
+    "benchmarks.sec64_sec65_meta",        # §6.4 consolidation + §6.5 meta-opt
+    "benchmarks.kernels_bench",           # §4: layer computation kernels
+    "benchmarks.roofline_summary",        # deliverable (g) roofline table
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{mod_name},ERROR,", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""§4.3 measured: the four convolution algorithms as runnable JAX code —
+wall time on CPU across kernel sizes, exhibiting the paper's claim that the
+best algorithm depends on the shape ('no one-size-fits-all')."""
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.models import conv as CV
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    N, C, H, K = 4, 16, 32, 16
+    for Ky in (3, 5, 7):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(Ky))
+        x = jax.random.normal(k1, (N, C, H, H))
+        w = jax.random.normal(k2, (K, C, Ky, Ky)) * 0.1
+        times = {}
+        for name, fn in CV.ALGORITHMS.items():
+            if name == "winograd" and Ky != 3:
+                continue
+            jfn = jax.jit(fn)
+            us, _ = time_fn(jfn, x, w)
+            times[name] = us
+        best = min(times, key=times.get)
+        for name, us in times.items():
+            emit(f"sec4/K={Ky}/{name}", us, f"best={name == best}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""§6.4 model consolidation + §6.5 meta-optimization benches: EASGD vs
+periodic averaging convergence; grid vs random vs PBT search quality."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import consolidation as con
+from repro.core import metaopt as mo
+
+
+def _quad(seed=0, dim=12):
+    key = jax.random.PRNGKey(seed)
+    A = jnp.diag(jax.random.uniform(key, (dim,), minval=0.5, maxval=3.0))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (dim,))
+    sol = jnp.linalg.solve(A, b)
+    return (lambda w, n=None: 0.5 * w["w"] @ A @ w["w"]
+            - (b + (0.0 if n is None else n)) @ w["w"]), {"w": jnp.zeros(dim)}, sol
+
+
+def main():
+    loss, w0, sol = _quad()
+    gfn = jax.grad(lambda w: loss(w))
+
+    # §6.4: EASGD
+    agents = [jax.tree.map(lambda p: p + 0.5 * i, w0) for i in range(4)]
+    center = w0
+    for _ in range(300):
+        agents, center = con.easgd_round(agents, center, [gfn(w) for w in agents],
+                                         lr=0.1, rho=0.05)
+    emit("sec64/easgd_4agents", None,
+         f"center_err={float(jnp.linalg.norm(center['w'] - sol)):.4f}")
+
+    # §6.4: periodic averaging
+    batches = jax.random.normal(jax.random.PRNGKey(2), (60, 12)) * 0.05
+    final, losses = con.periodic_average_sgd(lambda w, b: loss(w, b), w0,
+                                             batches, agents=3, lr=0.1)
+    emit("sec64/periodic_avg_3agents", None,
+         f"err={float(jnp.linalg.norm(final['w'] - sol)):.4f} "
+         f"loss {losses[0]:.2f}->{losses[-1]:.2f}")
+
+    # §6.5: hyper-parameter search
+    def train_eval(hypers, steps, state):
+        w = state if state is not None else w0
+        for _ in range(steps):
+            w = jax.tree.map(lambda p, g: p - hypers["lr"] * g, w, gfn(w))
+        return w, -float(loss(w))
+
+    best_g, sg, _ = mo.grid_search(train_eval, {"lr": [1e-3, 1e-2, 0.1, 0.3]}, 40)
+    emit("sec65/grid_search", None, f"best_lr={best_g['lr']} score={sg:.3f}")
+    best_r, sr, _ = mo.random_search(train_eval, {"lr": (1e-4, 1.0)}, 40, 8)
+    emit("sec65/random_search", None, f"best_lr={best_r['lr']:.4f} score={sr:.3f}")
+    best_p, hist = mo.population_based_training(
+        train_eval, [{"lr": v} for v in (1e-4, 1e-3, 0.05, 0.3)],
+        population=4, rounds=6, steps_per_round=15)
+    emit("sec65/pbt", None,
+         f"best_lr={best_p.hypers['lr']:.4f} score={best_p.score:.3f} "
+         f"round0_best={max(s for _, s in hist[0]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table 4: asymptotic Work-Depth per layer type, instantiated at
+AlexNet-era shapes (derived = W, D, avg parallelism W/D)."""
+from benchmarks.common import emit
+from repro.core import workdepth as wd
+
+
+def main():
+    N, C, H = 128, 96, 55
+    rows = [
+        ("fc_y", wd.fully_connected(N, 4096, 4096, "y")),
+        ("fc_dw", wd.fully_connected(N, 4096, 4096, "dw")),
+        ("fc_dx", wd.fully_connected(N, 4096, 4096, "dx")),
+        ("conv_y", wd.conv_direct(N, 227, 227, 3, 96, 11, 11, "y")),
+        ("conv_dw", wd.conv_direct(N, 227, 227, 3, 96, 11, 11, "dw")),
+        ("pool_y", wd.pooling(N, C, H, H, 3, 3, "y")),
+        ("bn_y", wd.batchnorm(N, C, H, H, "y")),
+        ("act_y", wd.activation(N, C, H, H, "y")),
+        ("attn_y(4k)", wd.attention(8, 4096, 32, 128)),
+        ("attn_y(4k,swa)", wd.attention(8, 4096, 32, 128, window=1024)),
+    ]
+    for name, r in rows:
+        emit(f"table4/{name}", None,
+             f"W={r.work} D={r.depth} par={r.avg_parallelism:.3e}")
+
+
+if __name__ == "__main__":
+    main()

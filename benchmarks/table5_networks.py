@@ -1,0 +1,28 @@
+"""Paper Table 5 + §3.3.1: network case studies. Reproduces the published
+LeNet-5 W/D numbers per layer (derived = ours == paper) and tabulates the
+published characteristics of the five networks."""
+from benchmarks.common import emit
+from repro.core import workdepth as wd
+
+
+def main():
+    ours = wd.lenet5_layers()
+    for name, (w, d) in wd.LENET5_PAPER.items():
+        if name == "total":
+            continue
+        o = ours[name]
+        emit(f"table5/lenet5/{name}", None,
+             f"ours=({o.work};{o.depth}) paper=({w};{d}) "
+             f"match={(o.work, o.depth) == (w, d)}")
+    t = wd.lenet5_inference()
+    emit("table5/lenet5/total", None,
+         f"W={t.work} D={t.depth} paper=(665832;41) "
+         f"match={(t.work, t.depth) == (665832, 41)}")
+
+    for net, props in wd.network_table5().items():
+        emit(f"table5/{net}", None,
+             f"params={props['params']} layers={props['layers']} ops={props['ops']}")
+
+
+if __name__ == "__main__":
+    main()

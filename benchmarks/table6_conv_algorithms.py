@@ -1,0 +1,26 @@
+"""Paper Table 6: convolution algorithm Work-Depth — direct / im2col / FFT /
+Winograd — across kernel sizes, exhibiting the paper's crossovers (§4.3:
+'the larger the kernels, the more beneficial FFT becomes'; Winograd for
+small kernels)."""
+from benchmarks.common import emit
+from repro.core import workdepth as wd
+
+
+def main():
+    N, H, C_in, C_out = 64, 56, 64, 64
+    for K in (3, 5, 7, 11, 13):
+        direct = wd.conv_direct(N, H, H, C_in, C_out, K, K)
+        im2col = wd.conv_im2col(N, H, H, C_in, C_out, K, K)
+        fft = wd.conv_fft(N, H, H, C_in, C_out)
+        emit(f"table6/K={K}/direct", None, f"W={direct.work:.3e} D={direct.depth}")
+        emit(f"table6/K={K}/im2col", None, f"W={im2col.work:.3e} D={im2col.depth}")
+        emit(f"table6/K={K}/fft", None,
+             f"W={fft.work:.3e} D={fft.depth} fft_wins={fft.work < direct.work}")
+        if K == 3:
+            wino = wd.conv_winograd(N, H, H, C_in, C_out, r=3, m=2)
+            emit("table6/K=3/winograd", None,
+                 f"W={wino.work:.3e} D={wino.depth} wins={wino.work < direct.work}")
+
+
+if __name__ == "__main__":
+    main()

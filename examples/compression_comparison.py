@@ -1,0 +1,66 @@
+"""Survey §6.3 end-to-end: train the same model under different gradient
+compressors (with error feedback) in the explicit-collective "paper mode"
+and compare loss curves + wire bytes.
+
+    PYTHONPATH=src python examples/compression_comparison.py
+    (spawns a 4-device subprocess internally if run on 1 device)
+
+Reproduces the survey's central compression claim: with local gradient
+accumulation (error feedback), even 1-bit / top-1% gradients track the
+uncompressed loss curve closely while moving 30–2000x fewer bytes.
+"""
+import os
+import subprocess
+import sys
+
+CODE = """
+import jax, jax.numpy as jnp
+from repro.configs.base import ModelConfig
+from repro.core.compression import make_compressor
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.optim import make_optimizer
+from repro.train import trainer
+
+cfg = ModelConfig(name="c", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+                  vocab_size=64, loss_chunk=32, attn_chunk=32, remat=False)
+mesh = make_host_mesh((len(jax.devices()),), ("data",))
+data = SyntheticLM(cfg.vocab_size, 64, noise=0.05)
+batches = list(data.batches(16, 60))
+n_params = cfg.param_count()
+
+for name in ("none", "int8", "onebit", "topk"):
+    comp = None if name == "none" else make_compressor(name, frac=0.01)
+    opt = make_optimizer("adam", lr=3e-3)
+    state = trainer.init_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(trainer.make_paper_train_step(
+        cfg, opt, mesh, algorithm="ring", compression=comp))
+    residual = (trainer.zero_residual(state["params"]) if comp
+                else {"_": jnp.zeros((1,), jnp.float32)})
+    losses = []
+    for b in batches:
+        state, m, residual = step(state, b, residual)
+        losses.append(float(m["loss"]))
+    ratio = 1.0 if comp is None else comp.ratio()
+    wire_mb = n_params * 4 / ratio / 1e6
+    print(f"{name:8s} first5={sum(losses[:5])/5:.3f} "
+          f"last5={sum(losses[-5:])/5:.3f} wire={wire_mb:.2f}MB/step "
+          f"({ratio:.0f}x compression)")
+print("DONE")
+"""
+
+
+def main():
+    env = {**os.environ, "PYTHONPATH": "src",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+    r = subprocess.run([sys.executable, "-c", CODE], env=env, text=True,
+                       capture_output=True, timeout=1800)
+    print(r.stdout)
+    if "DONE" not in r.stdout:
+        print(r.stderr[-2000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Batched serving demo: train a tiny model on the copy task until it can
+copy, then serve batched requests token-by-token through the KV cache.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import parallelism as par
+from repro.data.pipeline import copy_task
+from repro.launch.mesh import make_host_mesh
+from repro.optim import make_optimizer
+from repro.serving import serve
+from repro.train import trainer
+
+
+def main():
+    cfg = ModelConfig(name="copy", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=4, head_dim=32, d_ff=256,
+                      vocab_size=32, loss_chunk=32, attn_chunk=32, remat=False)
+    plan = par.make_plan("dp", make_host_mesh())
+    opt = make_optimizer("adam", lr=2e-3, grad_clip=1.0)
+    state = trainer.init_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(trainer.make_train_step(cfg, opt, plan))
+
+    seq = 32
+    for i in range(250):
+        batch = copy_task(32, seq, cfg.vocab_size, seed=i)
+        state, m = step(state, batch)
+        if i % 50 == 0:
+            print(f"step {i:3d} loss {float(m['loss']):.4f}")
+
+    # serve: prompt = [pattern, first half of its copy]; model must finish it
+    test = copy_task(4, seq, cfg.vocab_size, seed=9999)
+    half = seq // 2
+    keep = half // 2
+    prompt = test["tokens"][:, :half + keep]
+    out = serve.generate(cfg, state["params"], jnp.asarray(prompt),
+                         max_new=keep, temperature=0.0)
+    expect = test["tokens"][:, half + keep:half + 2 * keep]
+    acc = float(np.mean(np.asarray(out) == expect))
+    print(f"copy-task decode accuracy over {keep} tokens x4 requests: {acc:.2f}")
+
+
+if __name__ == "__main__":
+    main()

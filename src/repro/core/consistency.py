@@ -1,0 +1,70 @@
+"""Model-consistency spectrum (survey §6.1): sync / stale-sync / async.
+
+TPU SPMD execution is bulk-synchronous, so HOGWILD-style lock-free updates
+have no direct analogue (DESIGN.md §2). We *simulate* the semantics
+deterministically: K virtual training agents step round-robin; each agent
+computes its gradient against a parameter copy that is `staleness` updates
+old (a bounded gradient-delay queue). This reproduces the survey's
+staleness-vs-convergence trade-off (Fig 28's spectrum) measurably:
+
+  staleness = 0              synchronous data-parallel SGD
+  staleness <= s (bounded)   stale-synchronous parallel (SSP) [Ho et al. 2013]
+  staleness ~ K (unbounded)  asynchronous / Downpour-style [Dean et al. 2012]
+
+The whole simulation runs under jax.lax control flow, so it jits.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def simulate_stale_sgd(loss_fn, params0, batches, *, lr=0.1, staleness=0,
+                       agents=4):
+    """Run len(batches) SGD updates where each gradient is computed at the
+    parameter version from `staleness` steps ago (survey §6.1's w^(t−τ)).
+
+    loss_fn(params, batch) -> scalar. batches: pytree stacked on axis 0,
+    length divisible by 1. Returns (final params, losses per step).
+    """
+    hist0 = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (staleness + 1,) + p.shape).copy(),
+        params0)
+
+    def step(carry, batch):
+        params, hist = carry
+        stale = jax.tree.map(lambda h: h[0], hist)          # oldest in window
+        loss, grads = jax.value_and_grad(loss_fn)(stale, batch)
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        hist = jax.tree.map(
+            lambda h, n: jnp.concatenate([h[1:], n[None]], axis=0), hist, new)
+        return (new, hist), loss
+
+    (final, _), losses = jax.lax.scan(step, (params0, hist0), batches)
+    return final, losses
+
+
+def simulate_async_agents(loss_fn, params0, batches, *, lr=0.1, agents=4):
+    """Downpour-style simulation: `agents` workers each hold a local copy
+    fetched when they last pushed; pushes happen round-robin, so every
+    gradient arrives exactly `agents−1` versions stale. Returns (params,
+    losses)."""
+    local0 = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (agents,) + p.shape).copy(), params0)
+
+    def step(carry, xs):
+        params, local = carry
+        t, batch = xs
+        a = t % agents
+        mine = jax.tree.map(lambda l: l[a], local)
+        loss, grads = jax.value_and_grad(loss_fn)(mine, batch)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)  # push
+        local = jax.tree.map(lambda l, p: l.at[a].set(p), local, params)  # fetch
+        return (params, local), loss
+
+    n = len(jax.tree_util.tree_leaves(batches)[0])
+    (final, _), losses = jax.lax.scan(
+        step, (params0, local0), (jnp.arange(n), batches))
+    return final, losses

@@ -1,0 +1,81 @@
+"""Model consolidation — survey §6.4: the inconsistent end of the parameter-
+consistency spectrum (Fig 28).
+
+* Ensemble learning (§6.4.1): separately trained members, averaged
+  *predictions* — "a completely parallel process, requiring no communication
+  between the agents".
+* Knowledge distillation (§6.4.1) [Ba & Caruana; Hinton et al.]: a student
+  trained to mimic ensemble logits.
+* Model averaging (§6.4.2): one-shot (ParallelSGD [Zinkevich et al.]) and
+  periodic averaging; Elastic Averaging SGD [Zhang et al. 2015] with the
+  elastic force ρ(w_i − w̄) between agents and the center variable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ ensembles
+def ensemble_logits(apply_fn, members, x):
+    """Average member predictions: f(x) = 1/m Σ f_{w_i}(x) (§6.4.1)."""
+    logits = jnp.stack([apply_fn(w, x) for w in members])
+    return jnp.mean(logits, axis=0)
+
+
+def average_params(members):
+    """One-shot parameter averaging (ParallelSGD consolidation)."""
+    return jax.tree.map(lambda *ws: sum(ws) / len(ws), *members)
+
+
+# --------------------------------------------------------------- distillation
+def distill_loss(student_logits, teacher_logits, temperature=2.0):
+    """KL(teacher‖student) at temperature T (Hinton et al. 2015)."""
+    t = jax.nn.softmax(teacher_logits / temperature, axis=-1)
+    ls = jax.nn.log_softmax(student_logits / temperature, axis=-1)
+    return -jnp.mean(jnp.sum(t * ls, axis=-1)) * temperature ** 2
+
+
+# ---------------------------------------------------------------------- EASGD
+def easgd_round(agents, center, grads, *, lr=0.1, rho=0.1):
+    """One EASGD update for every agent + the center variable w̄:
+
+        w_i ← w_i − lr·(g_i + ρ(w_i − w̄))
+        w̄   ← w̄ + lr·ρ·Σ_i (w_i − w̄)
+
+    The elastic force lets agents explore away from the center while pulling
+    the ensemble together — communication happens only through w̄ (a PS).
+    """
+    new_agents = []
+    pull = jax.tree.map(jnp.zeros_like, center)
+    for w, g in zip(agents, grads):
+        diff = jax.tree.map(lambda a, c: a - c, w, center)
+        new_agents.append(jax.tree.map(
+            lambda a, g_, d: a - lr * (g_ + rho * d), w, g, diff))
+        pull = jax.tree.map(lambda p, d: p + d, pull, diff)
+    new_center = jax.tree.map(lambda c, p: c + lr * rho * p, center, pull)
+    return new_agents, new_center
+
+
+def periodic_average_sgd(loss_fn, params0, batches, *, agents=4, lr=0.1,
+                         avg_every=10):
+    """§6.4.2 periodic model averaging: m independent SGD streams averaged
+    every k steps. Returns (final averaged params, per-step mean losses)."""
+    ws = [params0 for _ in range(agents)]
+    n = len(jax.tree_util.tree_leaves(batches)[0])
+    losses = []
+    gfn = jax.jit(jax.value_and_grad(loss_fn))
+    for t in range(n):
+        batch = jax.tree.map(lambda b: b[t], batches)
+        step_losses = []
+        for i in range(agents):
+            li, gi = gfn(ws[i], batch)
+            ws[i] = jax.tree.map(lambda w, g: w - lr * g, ws[i], gi)
+            step_losses.append(float(li))
+        losses.append(sum(step_losses) / agents)
+        if (t + 1) % avg_every == 0:
+            avg = average_params(ws)
+            ws = [avg for _ in range(agents)]
+    return average_params(ws), losses

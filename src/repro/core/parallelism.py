@@ -1,0 +1,269 @@
+"""Parallelism strategies (survey §5) as composable sharding plans.
+
+A `ShardingPlan` maps parameter / activation / cache pytrees to
+`PartitionSpec`s over a mesh with axes drawn from ('pod', 'data', 'model').
+
+Presets (selectable via ``--plan``):
+  dp           pure data parallelism (§5.1): params replicated, batch sharded
+               over every mesh axis (the 2018 default — all devices are data).
+  tp           pure model parallelism (§5.2): heads / FFN / experts / vocab
+               sharded over *all* axes; batch replicated.
+  dp_tp        hybrid (§5.4, Krizhevsky "one weird trick"): batch over
+               ('pod','data'), tensor dims over 'model'.  Paper-faithful
+               baseline for every dry-run.
+  dp_tp_zero1  beyond-paper: dp_tp + optimizer state sharded over 'data'
+               (reduce-scatter descendant of the sharded parameter server §6.2).
+  dp_tp_seq    beyond-paper: dp_tp + sequence(context) sharding of long KV
+               caches/activations over 'data' for decode shapes.
+
+Activation constraints inside model code go through `constrain(x, names)`,
+a no-op unless a plan context is active (keeps models import-clean).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PLANS = ("dp", "tp", "dp_tp", "dp_tp_zero1", "dp_tp_seq", "dp_tp_sp", "dp_tp_sp_zero1")
+
+_ctx: contextvars.ContextVar = contextvars.ContextVar("sharding_ctx", default=None)
+
+
+def _divisible(n: Optional[int], axes: tuple[str, ...], mesh: Mesh) -> bool:
+    if n is None:
+        return False
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0 and n >= size
+
+
+@dataclass
+class ShardingPlan:
+    name: str
+    mesh: Mesh
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        ax = tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+        if self.name == "dp":           # every axis is a data axis
+            return ax + (("model",) if "model" in self.mesh.shape else ())
+        if self.name == "tp":
+            return ()
+        return ax
+
+    @property
+    def tensor_axes(self) -> tuple[str, ...]:
+        if self.name == "dp":
+            return ()
+        if self.name == "tp":
+            return tuple(a for a in ("pod", "data", "model") if a in self.mesh.shape)
+        return ("model",)
+
+    @property
+    def seq_axes(self) -> tuple[str, ...]:
+        """Axis for *activation/cache sequence* sharding: 'data' for the
+        long-context decode plan; 'model' for Megatron-style sequence
+        parallelism (residual stream sharded between layers, §Perf)."""
+        if self.name == "dp_tp_seq":
+            return ("data",)
+        if self.name in ("dp_tp_sp", "dp_tp_sp_zero1"):
+            return ("model",)
+        return ()
+
+    # ---------------------------------------------------------------- helpers
+    def _shard_dim(self, size):
+        """tensor axes if divisible, else nothing."""
+        return self.tensor_axes if _divisible(size, self.tensor_axes, self.mesh) else None
+
+    def spec_for_param(self, path: str, shape) -> P:
+        """Name+shape-based tensor-parallel rules (§5.2: partition neurons)."""
+        t = self.tensor_axes
+        if not t:
+            return P()
+        dims = list(shape)
+        # stacked leading superblock/inner-layer dims are never sharded
+        def dspec(i):
+            return self._shard_dim(dims[i])
+
+        if re.search(r"embed/table|lm_head/w", path):
+            # shard vocab dim: table (V, D) dim0; head w (D, V) dim1
+            vdim = 0 if "table" in path else 1
+            spec = [None] * len(dims)
+            spec[vdim] = dspec(vdim)
+            return P(*spec)
+        if re.search(r"attn/(wq|wk|wv)", path):
+            spec = [None] * len(dims)
+            spec[-1] = dspec(len(dims) - 1)     # heads*hd output dim
+            return P(*spec)
+        if re.search(r"attn/wo", path):
+            spec = [None] * len(dims)
+            spec[-2] = dspec(len(dims) - 2)     # heads*hd input dim
+            return P(*spec)
+        if re.search(r"(mlp|cm_k)/(w_gate|w_in)|cm_k", path):
+            spec = [None] * len(dims)
+            spec[-1] = dspec(len(dims) - 1)     # ffn dim
+            return P(*spec)
+        if re.search(r"(mlp/w_out|cm_v)", path):
+            spec = [None] * len(dims)
+            spec[-2] = dspec(len(dims) - 2)
+            return P(*spec)
+        if re.search(r"moe/(w_gate|w_in|w_out)", path):
+            # (..., E, D, F) / (..., E, F, D): expert dim if divisible, else F
+            e_dim, f_dim = len(dims) - 3, (len(dims) - 1 if "out" not in path else len(dims) - 2)
+            if "w_out" in path:
+                f_dim = len(dims) - 2
+            spec = [None] * len(dims)
+            if _divisible(dims[e_dim], t, self.mesh):
+                spec[e_dim] = t
+            else:
+                spec[f_dim] = dspec(f_dim)
+            return P(*spec)
+        if re.search(r"rwkv/(wr|wk|wv|wg|wo)|mamba/(in_proj|out_proj)", path):
+            spec = [None] * len(dims)
+            spec[-1] = dspec(len(dims) - 1)
+            return P(*spec)
+        return P()  # norms, biases, routers, small decays: replicated
+
+    def spec_for_batch_leaf(self, path: str, shape) -> P:
+        """Input batch: tokens/labels (B, S), embeds (B, S, D), mrope (3, B, S)."""
+        b = self.batch_axes
+        bspec = b if _divisible(shape[0], b, self.mesh) else None
+        if path.endswith("positions") and len(shape) == 3 and shape[0] == 3:
+            b2 = b if _divisible(shape[1], b, self.mesh) else None
+            return P(None, b2, None)
+        return P(bspec, *([None] * (len(shape) - 1)))
+
+    def spec_for_cache_leaf(self, path: str, shape) -> P:
+        """KV caches (n_sb, B, S, Hkv, hd) and SSM states (n_sb, B, H, ...)."""
+        b = self.batch_axes
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and _divisible(shape[1], b, self.mesh):
+            spec[1] = b            # batch dim
+        elif "/k" in path or "/v" in path:
+            # batch unshardable (long_500k b=1): shard cache sequence instead
+            seq_ax = self.seq_axes or (("data",) if "data" in self.mesh.shape
+                                       and self.name not in ("dp", "tp") else ())
+            if len(shape) >= 3 and seq_ax and _divisible(shape[2], seq_ax, self.mesh):
+                spec[2] = seq_ax
+        # shard kv heads / state heads over tensor axes when divisible
+        if len(shape) >= 4 and self.tensor_axes:
+            hdim = 3 if ("/k" in path or "/v" in path) else 2
+            if hdim < len(shape) and _divisible(shape[hdim], self.tensor_axes, self.mesh):
+                spec[hdim] = self.tensor_axes
+        return P(*spec)
+
+    # ------------------------------------------------------------- tree specs
+    def tree_specs(self, tree, leaf_fn):
+        paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+        flat = [leaf_fn("/".join(str(getattr(k, "key", k)) for k in path), leaf.shape)
+                for path, leaf in paths]
+        return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree), flat)
+
+    def param_specs(self, params):
+        return self.tree_specs(params, self.spec_for_param)
+
+    def param_shardings(self, params):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(params))
+
+    def batch_specs(self, batch):
+        return self.tree_specs(batch, self.spec_for_batch_leaf)
+
+    def batch_shardings(self, batch):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.batch_specs(batch))
+
+    def cache_specs(self, cache):
+        return self.tree_specs(cache, self.spec_for_cache_leaf)
+
+    def cache_shardings(self, cache):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.cache_specs(cache))
+
+    def opt_specs(self, params, zero1: Optional[bool] = None):
+        """Optimizer-moment specs; ZeRO-1 additionally shards the largest
+        still-unsharded divisible dim over the data axis (sharded-PS, §6.2)."""
+        zero1 = self.name in ("dp_tp_zero1", "dp_tp_sp_zero1") if zero1 is None else zero1
+        base = self.param_specs(params)
+        if not zero1 or "data" not in self.mesh.shape:
+            return base
+
+        def upgrade(path, leaf, spec):
+            spec = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            order = sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i])
+            for i in order:
+                if spec[i] is None and _divisible(leaf.shape[i], ("data",), self.mesh):
+                    spec[i] = "data"
+                    break
+            return P(*spec)
+
+        paths = jax.tree_util.tree_flatten_with_path(params)[0]
+        flat_specs = jax.tree_util.tree_leaves(base, is_leaf=lambda x: isinstance(x, P))
+        out = [upgrade(p, l, s) for (p, l), s in zip(
+            [(path, leaf) for path, leaf in paths], flat_specs)]
+        return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), out)
+
+    # --------------------------------------------------- activation constraints
+    def logical_spec(self, names) -> P:
+        out = []
+        for n in names:
+            if n == "batch":
+                out.append(self.batch_axes or None)
+            elif n == "seq":
+                out.append(self.seq_axes or None)
+            elif n in ("heads", "ffn", "vocab", "expert"):
+                out.append(self.tensor_axes or None)
+            elif n == "capacity":
+                out.append(self.batch_axes or None)
+            else:
+                out.append(None)
+        return P(*out)
+
+
+def make_plan(name: str, mesh: Mesh) -> ShardingPlan:
+    if name not in PLANS:
+        raise ValueError(f"unknown plan {name!r}; options: {PLANS}")
+    return ShardingPlan(name, mesh)
+
+
+# ------------------------------------------------------------------- context
+@contextlib.contextmanager
+def plan_context(plan: ShardingPlan):
+    token = _ctx.set(plan)
+    try:
+        yield
+    finally:
+        _ctx.reset(token)
+
+
+def current_plan():
+    """The active ShardingPlan, or None outside a plan context."""
+    return _ctx.get()
+
+
+def constrain(x, names):
+    """Apply a logical sharding constraint if a plan context is active."""
+    plan = _ctx.get()
+    if plan is None or not hasattr(x, "ndim"):
+        return x
+    names = tuple(names)
+    if len(names) < x.ndim:            # scan/vmap may add leading dims
+        names = (None,) * (x.ndim - len(names)) + names
+    elif len(names) > x.ndim:
+        names = names[-x.ndim:]
+    raw = plan.logical_spec(names)
+    # drop axes whose size doesn't divide the dim (GSPMD would pad; avoid)
+    clean = []
+    for dim, entry in zip(x.shape, tuple(raw) + (None,) * (x.ndim - len(raw))):
+        if entry is None:
+            clean.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        clean.append(axes if _divisible(dim, axes, plan.mesh) else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, P(*clean)))

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: materialized-scores softmax attention with the same
+masking semantics as the flash kernel."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True, window=None):
+    """q, k, v: (BH, S, hd) -> (BH, S, hd)."""
+    BH, S, hd = q.shape
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.matmul.ops import matmul  # noqa: F401
+from repro.kernels.matmul.ref import matmul_ref  # noqa: F401

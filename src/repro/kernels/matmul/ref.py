@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the blocked GEMM kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)

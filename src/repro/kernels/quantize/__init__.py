@@ -1,0 +1,2 @@
+from repro.kernels.quantize.ops import quantize_blocks, dequantize_blocks  # noqa: F401
+from repro.kernels.quantize.ref import quantize_blocks_ref  # noqa: F401

@@ -1,0 +1,62 @@
+"""Block-scaled int8 stochastic-rounding quantizer — Pallas TPU kernel for
+the gradient-compression hot spot (survey §6.3.1, QSGD / Gupta et al.).
+
+Every gradient bucket of `block` contiguous values is scaled by max|g|/127
+and stochastically rounded to int8: E[dequant(quant(g))] = g, the survey's
+convergence condition. On an allreduce path this runs on the full gradient
+every step — bandwidth-bound, so the kernel streams rows of buckets through
+VMEM in one pass (read f32, write int8 + one f32 scale per bucket: a 3.9×
+wire/HBM reduction).
+
+Uniform noise is an explicit operand (deterministic, testable vs ref.py);
+on-device RNG (pltpu.prng_random_bits) is a drop-in for production.
+
+Grid: (rows/block_rows,); each step quantizes (block_rows, block) values.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def quantize_kernel(x_ref, u_ref, q_ref, s_ref, *, maxq):
+    x = x_ref[...].astype(jnp.float32)               # (bm, block)
+    u = u_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax == 0.0, 1.0, amax / maxq)
+    y = x / scale
+    lo = jnp.floor(y)
+    p = y - lo
+    q = lo + (u < p).astype(jnp.float32)
+    q_ref[...] = jnp.clip(q, -maxq - 1, maxq).astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+def quantize_pallas(x, noise, *, bits=8, block_rows=256, interpret=False):
+    """x: (rows, block) f32; noise: same shape uniform[0,1).
+    Returns (q int8 (rows, block), scales f32 (rows,))."""
+    rows, block = x.shape
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    maxq = float(2 ** (bits - 1) - 1)
+    kern = functools.partial(quantize_kernel, maxq=maxq)
+    return pl.pallas_call(
+        kern,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, block), jnp.int8),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, noise)

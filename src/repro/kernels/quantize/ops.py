@@ -1,0 +1,37 @@
+"""jit'd wrappers: flat-gradient <-> (int8 blocks, scales)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import quantize_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def quantize_blocks(flat, key, *, bits=8, block=256, interpret=None):
+    """flat: (n,) f32 gradient; returns (q (rows, block) int8, scales (rows,),
+    n) — padded to a block multiple."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = flat.shape[0]
+    pad = (-n) % block
+    x = jnp.pad(flat.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    rows = x.shape[0]
+    block_rows = 256
+    while rows % block_rows:           # largest power-of-two divisor ≤ 256
+        block_rows //= 2
+    noise = jax.random.uniform(key, x.shape)
+    q, s = quantize_pallas(x, noise, bits=bits, block_rows=block_rows,
+                           interpret=interpret)
+    return q, s
+
+
+@partial(jax.jit, static_argnames=("n",))
+def dequantize_blocks(q, scales, n=None):
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    return flat if n is None else flat[:n]

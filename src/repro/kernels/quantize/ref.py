@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the block quantizer."""
+import jax.numpy as jnp
+
+
+def quantize_blocks_ref(x, noise, bits=8):
+    """x, noise: (rows, block). Returns (q int8, scales f32)."""
+    maxq = float(2 ** (bits - 1) - 1)
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax == 0.0, 1.0, amax / maxq)
+    y = x / scale
+    lo = jnp.floor(y)
+    q = lo + (noise < (y - lo)).astype(jnp.float32)
+    return (jnp.clip(q, -maxq - 1, maxq).astype(jnp.int8), scale[:, 0])
+
+
+def dequantize_blocks_ref(q, scales):
+    return q.astype(jnp.float32) * scales[:, None]

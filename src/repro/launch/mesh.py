@@ -1,0 +1,26 @@
+"""Production mesh builders (pure functions — importing never touches jax
+device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips ('data','model'); multi-pod adds a 2-way
+    'pod' axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1,), axes=("data",)):
+    """Whatever-fits mesh for CPU smoke runs."""
+    n_dev = len(jax.devices())
+    total = 1
+    for s in shape:
+        total *= s
+    if total > n_dev:
+        shape, axes = (n_dev,), ("data",)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

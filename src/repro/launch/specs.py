@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero allocation (deliverable (e) step 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SHAPES, InputShape
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract inputs for (cfg, shape). Returns a dict:
+      train/prefill: batch for loss_fn/forward
+      decode:        {"inputs", "cache", "index"} for decode_step
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.frontend != "none":
+            batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+            if cfg.rope_mode == "mrope":
+                batch["positions"] = _sds((3, B, S), jnp.int32)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        return {"batch": batch}
+
+    # decode: ONE new token against a cache of length seq_len
+    cache = jax.eval_shape(lambda: T.init_decode_state(cfg, B, S))
+    inputs = ({"embed": _sds((B, cfg.d_model), jnp.bfloat16)}
+              if cfg.frontend != "none" else {"token": _sds((B,), jnp.int32)})
+    return {
+        "inputs": inputs,
+        "cache": cache,
+        "index": _sds((), jnp.int32),
+    }
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention arch — 500k dense-KV "
+                       "decode is memory-infeasible; no windowed variant in "
+                       "the model card (DESIGN.md §Decode-shape rules)")
+    return True, ""

@@ -1,0 +1,177 @@
+"""GQA attention: full / sliding-window / local-global, training and decode.
+
+Two XLA execution strategies (the Pallas flash kernel in repro.kernels is the
+TPU-native third, validated in interpret mode):
+
+* ``naive``   — materialize (S, S) scores; fine for smoke tests.
+* ``chunked`` — lax.scan over query chunks with online softmax
+  (flash-attention recurrence in pure jnp); bounds activation memory to
+  O(chunk · S) per head and is the oracle for the Pallas kernel.
+
+Decode: one query token against a KV cache laid out (B, S_max, Hkv, hd).
+Sliding-window layers keep a ring-buffer cache of size window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def init_attention(key, cfg):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = L.dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, (d, h * hd), dt),
+        "wk": L.dense_init(k2, (d, hkv * hd), dt),
+        "wv": L.dense_init(k3, (d, hkv * hd), dt),
+        "wo": L.dense_init(k4, (h * hd, d), dt),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _mask(q_pos, k_pos, window):
+    """causal (+ optional sliding window) mask: True = attend."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _project_qkv(params, x, positions, cfg, window):
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(jnp.einsum("bsd,dk->bsk", x, params["wq"]), h, hd)
+    k = _split_heads(jnp.einsum("bsd,dk->bsk", x, params["wk"]), hkv, hd)
+    v = _split_heads(jnp.einsum("bsd,dk->bsk", x, params["wv"]), hkv, hd)
+    if cfg.rope_mode == "standard":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_mode == "mrope":
+        q = L.apply_mrope(q, positions, cfg.rope_theta)
+        k = L.apply_mrope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_train(params, x, positions, cfg, *, window=None, impl="chunked"):
+    """Self-attention over a full sequence. x: (B,S,D); positions (B,S) or (3,B,S)."""
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, x, positions, cfg, window)
+    n_rep = h // hkv
+    scale = 1.0 / np.sqrt(hd)
+    B, S = x.shape[0], x.shape[1]
+    qpos = jnp.arange(S)
+
+    if impl == "naive" or S <= cfg.attn_chunk:
+        kk = _repeat_kv(k, n_rep)
+        vv = _repeat_kv(v, n_rep)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+        mask = _mask(qpos, qpos, window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    else:
+        out = _chunked_attention(q, k, v, n_rep, scale, cfg.attn_chunk, window)
+
+    out = out.reshape(B, S, h * hd)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"])
+
+
+def _chunked_attention(q, k, v, n_rep, scale, chunk, window):
+    """Online-softmax attention, scanning over query chunks (flash-style).
+
+    For sliding-window layers each query chunk only reads the KV slice
+    [chunk_start - window, chunk_end) — sub-quadratic work.
+    """
+    B, S, H, hd = q.shape
+    nq = S // chunk
+    kk = _repeat_kv(k, n_rep)          # (B, S, H, hd)
+    vv = _repeat_kv(v, n_rep)
+    kpos_all = jnp.arange(S)
+
+    if window is not None:
+        span = int(min(S, chunk * int(np.ceil(window / chunk)) + chunk))
+    else:
+        span = None
+
+    @jax.checkpoint
+    def one_chunk(qi, q_chunk):
+        # rematted: per-chunk scores/probs are recomputed in the backward
+        # pass — peak live memory stays O(one chunk), not O(all chunks)
+        q_start = qi * chunk
+        qpos = q_start + jnp.arange(chunk)
+        if span is None:
+            keys, vals, kpos = kk, vv, kpos_all
+        else:
+            k_start = jnp.maximum(q_start + chunk - span, 0)
+            keys = jax.lax.dynamic_slice_in_dim(kk, k_start, span, axis=1)
+            vals = jax.lax.dynamic_slice_in_dim(vv, k_start, span, axis=1)
+            kpos = k_start + jnp.arange(span)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_chunk, keys).astype(jnp.float32) * scale
+        m = _mask(qpos, kpos, window)
+        s = jnp.where(m[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vals)
+
+    q_chunks = q.reshape(B, nq, chunk, H, hd).swapaxes(0, 1)   # (nq,B,chunk,H,hd)
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(nq), q_chunks))
+    return out.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+# ------------------------------------------------------------------- decode
+def init_kv_cache(cfg, batch, max_len, window=None):
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    size = min(max_len, window) if window is not None else max_len
+    dt = L.dtype_of(cfg)
+    return {
+        "k": jnp.zeros((batch, size, hkv, hd), dt),
+        "v": jnp.zeros((batch, size, hkv, hd), dt),
+    }
+
+
+def attention_decode(params, x, cache, index, cfg, *, window=None):
+    """One-token decode. x: (B,1,D); cache k/v: (B,Sc,Hkv,hd); index: scalar
+    current absolute position. Returns (out, new_cache)."""
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B = x.shape[0]
+    positions = jnp.full((B, 1), index, jnp.int32)
+    if cfg.rope_mode == "mrope":
+        positions = jnp.broadcast_to(positions, (3, B, 1))
+    q, k_new, v_new = _project_qkv(params, x, positions, cfg, window)
+    Sc = cache["k"].shape[1]
+    slot = index % Sc if window is not None else index      # ring buffer
+    k = cache["k"].at[:, slot].set(k_new[:, 0])
+    v = cache["v"].at[:, slot].set(v_new[:, 0])
+    n_rep = h // hkv
+    kk = _repeat_kv(k, n_rep)
+    vv = _repeat_kv(v, n_rep)
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    kpos = jnp.arange(Sc)
+    if window is not None:
+        # ring buffer: valid entries are those written within the last
+        # `window` steps; absolute position of slot j is reconstructed below.
+        age = (slot - kpos) % Sc
+        valid = age < jnp.minimum(index + 1, Sc)
+    else:
+        valid = kpos <= index
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(B, 1, h * hd)
+    out = jnp.einsum("bsk,kd->bsd", out, params["wo"])
+    return out, {"k": k, "v": v}

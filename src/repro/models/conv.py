@@ -1,0 +1,99 @@
+"""Convolution algorithms from survey §4.3, implemented and cross-validated:
+direct, im2col (Toeplitz/GEMM), FFT, and Winograd F(2x2, 3x3).
+
+These are the survey's Table-6 subjects as *runnable* JAX code (the W-D
+models live in core/workdepth.py). All operate on NCHW tensors with VALID
+padding, matching Eq. 2 of the paper; each is tested against `conv_direct`
+in tests/test_conv_algorithms.py, including the paper's numerics claim that
+Winograd loses accuracy relative to direct computation as magnitudes grow.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_direct(x, w):
+    """Eq. 2 verbatim via lax.conv. x: (N, C, H, W); w: (K, C, Ky, Kx)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def conv_im2col(x, w):
+    """Toeplitz unrolling + one GEMM (§4.3 'processor-friendly' method)."""
+    N, C, H, W = x.shape
+    K, C2, Ky, Kx = w.shape
+    Ho, Wo = H - Ky + 1, W - Kx + 1
+    # patches: (N, Ho, Wo, C*Ky*Kx)
+    patches = jnp.stack([
+        x[:, :, dy:dy + Ho, dx:dx + Wo]
+        for dy in range(Ky) for dx in range(Kx)
+    ], axis=-1)                                    # (N, C, Ho, Wo, Ky*Kx)
+    patches = patches.transpose(0, 2, 3, 1, 4).reshape(N * Ho * Wo, C * Ky * Kx)
+    kernel = w.reshape(K, C * Ky * Kx).T           # (C*Ky*Kx, K)
+    out = patches @ kernel                         # THE GEMM
+    return out.reshape(N, Ho, Wo, K).transpose(0, 3, 1, 2)
+
+
+def conv_fft(x, w):
+    """Fourier-domain convolution (§4.3): y = IFFT(Σ_c FFT(x_c) ∘ FFT(w_c)).
+
+    Correlation (as in Eq. 2) = convolution with a flipped kernel, handled by
+    conjugation-free index flip before the transform.
+    """
+    N, C, H, W = x.shape
+    K, _, Ky, Kx = w.shape
+    Ho, Wo = H - Ky + 1, W - Kx + 1
+    wf = w[:, :, ::-1, ::-1]                       # correlation -> convolution
+    X = jnp.fft.rfft2(x, s=(H, W))                 # (N, C, H, W//2+1)
+    Wt = jnp.fft.rfft2(wf, s=(H, W))               # (K, C, H, W//2+1)
+    Y = jnp.einsum("nchw,kchw->nkhw", X, Wt)       # sum over channels
+    y = jnp.fft.irfft2(Y, s=(H, W))                # full conv result
+    return y[:, :, Ky - 1:Ky - 1 + Ho, Kx - 1:Kx - 1 + Wo]
+
+
+# Winograd F(2x2, 3x3) transform matrices [Lavin & Gray 2016, §4.3]
+_B = np.array([[1, 0, 0, 0], [0, 1, -1, 1], [-1, 1, 1, 0], [0, 0, 0, -1]],
+              np.float32)
+_G = np.array([[1, 0, 0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0, 0, 1]],
+              np.float32)
+_A = np.array([[1, 0], [1, 1], [1, -1], [0, -1]], np.float32)
+
+
+def conv_winograd(x, w):
+    """Winograd minimal filtering F(2x2, 3x3) (§4.3):
+       Y = A^T [ Σ_c (G g G^T) ∘ (B^T d B) ] A  per 4x4 tile."""
+    N, C, H, W = x.shape
+    K, _, Ky, Kx = w.shape
+    assert (Ky, Kx) == (3, 3), "Winograd path is for 3x3 kernels (§4.3)"
+    Ho, Wo = H - 2, W - 2
+    m = 2
+    tiles_y, tiles_x = Ho // m, Wo // m
+    B, G, A = (jnp.asarray(M) for M in (_B, _G, _A))
+
+    # kernel transform: U = G g G^T  -> (K, C, 4, 4)
+    U = jnp.einsum("ij,kcjl,ml->kcim", G, w, G)
+
+    # input tiles: d (N, C, ty, tx, 4, 4) with stride m
+    d = jnp.stack([
+        jnp.stack([
+            x[:, :, 2 * ty:2 * ty + 4, 2 * tx:2 * tx + 4]
+            for tx in range(tiles_x)], axis=2)
+        for ty in range(tiles_y)], axis=2)          # (N, C, ty, tx, 4, 4)
+    V = jnp.einsum("ji,nctxjl,lm->nctxim", B, d, B)   # B^T d B
+
+    M = jnp.einsum("kcim,nctxim->nktxim", U, V)     # elementwise ∘, Σ_c
+    Y = jnp.einsum("ji,nktxjl,lm->nktxim", A, M, A)  # (N, K, ty, tx, 2, 2)
+    out = Y.transpose(0, 1, 2, 4, 3, 5).reshape(N, K, tiles_y * m, tiles_x * m)
+    return out[:, :, :Ho, :Wo]
+
+
+ALGORITHMS = {
+    "direct": conv_direct,
+    "im2col": conv_im2col,
+    "fft": conv_fft,
+    "winograd": conv_winograd,
+}

@@ -1,0 +1,325 @@
+"""Generic decoder assembled from a ModelConfig.
+
+Layers are grouped into *superblocks* and scanned (`jax.lax.scan`) so the
+lowered HLO is O(1) in depth — essential for compiling 48-layer models with
+512 placeholder devices on one CPU core:
+
+  family                superblock
+  ------                ----------
+  dense/vlm/audio/moe   1 layer (attn + mlp|moe)
+  local_global (gemma3) ratio local layers + 1 global layer
+  ssm (rwkv6)           time-mix + channel-mix
+  hybrid (zamba2)       N mamba2 layers + 1 *shared-weight* attention layer
+
+Entry points:
+  init_params(cfg, key)
+  forward(cfg, params, inputs)                  -> hidden (B,S,D), aux
+  loss_fn(cfg, params, batch)                   -> scalar loss (chunked CE)
+  init_decode_state(cfg, batch, max_len)        -> stacked per-superblock caches
+  decode_step(cfg, params, state, inputs, idx)  -> logits (B,1,V), new state
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.parallelism import constrain
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ------------------------------------------------------------- superblock def
+def superblock_layout(cfg: ModelConfig):
+    """Returns (n_superblocks, layers_per_superblock)."""
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_ssm_per_attn + 1
+        return cfg.num_layers // per, per
+    if cfg.attention_type == "local_global":
+        per = cfg.local_global_ratio + 1
+        return cfg.num_layers // per, per
+    return cfg.num_layers, 1
+
+
+def _layer_kinds(cfg: ModelConfig):
+    """Static list of layer kinds within one superblock."""
+    _, per = superblock_layout(cfg)
+    if cfg.family == "hybrid":
+        return ["mamba"] * cfg.hybrid_ssm_per_attn + ["shared_attn"]
+    if cfg.attention_type == "local_global":
+        return ["local"] * cfg.local_global_ratio + ["global"]
+    if cfg.family == "ssm":
+        return ["rwkv"]
+    if cfg.num_experts:
+        return ["moe_attn"]
+    return ["attn"]
+
+
+# ------------------------------------------------------------------ param init
+def _init_attn_layer(key, cfg, with_moe=False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": A.init_attention(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+    }
+    if with_moe:
+        p["moe"] = M.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_swiglu(k3, cfg.d_model, cfg.d_ff, L.dtype_of(cfg))
+    return p
+
+
+def _init_superblock(key, cfg):
+    kinds = _layer_kinds(cfg)
+    keys = jax.random.split(key, len(kinds))
+    out = {}
+    for i, (kind, k) in enumerate(zip(kinds, keys)):
+        if kind in ("attn", "local", "global"):
+            out[f"l{i}"] = _init_attn_layer(k, cfg, with_moe=False)
+        elif kind == "moe_attn":
+            out[f"l{i}"] = _init_attn_layer(k, cfg, with_moe=True)
+        elif kind == "rwkv":
+            out[f"l{i}"] = {
+                "ln1": L.init_rmsnorm(cfg.d_model),
+                "rwkv": S.init_rwkv6(k, cfg),
+                "ln2": L.init_rmsnorm(cfg.d_model),
+            }
+        elif kind == "mamba":
+            k1, k2 = jax.random.split(k)
+            out[f"l{i}"] = {
+                "ln1": L.init_rmsnorm(cfg.d_model),
+                "mamba": S.init_mamba2(k1, cfg),
+                "ln2": L.init_rmsnorm(cfg.d_model),
+                "mlp": L.init_swiglu(k2, cfg.d_model, cfg.d_ff, L.dtype_of(cfg)),
+            }
+        elif kind == "shared_attn":
+            out[f"l{i}"] = {}  # weights live in params["shared_attn"]
+    return out
+
+
+def init_params(cfg: ModelConfig, key):
+    n_sb, _ = superblock_layout(cfg)
+    k_embed, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+    dt = L.dtype_of(cfg)
+    params = {
+        "embed": L.init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": jax.vmap(lambda k: _init_superblock(k, cfg))(
+            jax.random.split(k_blocks, n_sb)),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dt)}
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_attn_layer(k_shared, cfg, with_moe=False)
+    return params
+
+
+# -------------------------------------------------------------------- forward
+def _apply_layer_train(kind, lp, x, positions, cfg, shared):
+    aux = jnp.float32(0.0)
+    if kind in ("attn", "local", "global", "moe_attn", "shared_attn"):
+        p = shared if kind == "shared_attn" else lp
+        window = None
+        if kind == "local" or (cfg.attention_type == "sliding" and kind in ("attn", "moe_attn")):
+            window = cfg.window_size
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + A.attention_train(p["attn"], h, positions, cfg, window=window)
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "moe_attn":
+            from repro.core.parallelism import current_plan
+            plan = current_plan()
+            if M.ep_applicable(cfg, plan):
+                x = x + M.moe_apply_ep(lp["moe"], h, cfg, plan)
+            else:
+                x = x + M.moe_apply(lp["moe"], h, cfg, constrain=constrain)
+            aux = M.load_balance_loss(lp["moe"], h, cfg)
+        else:
+            x = x + L.swiglu(p["mlp"], h)
+    elif kind == "rwkv":
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        y, _ = S.rwkv6_mix(lp["rwkv"], h, cfg)
+        x = x + y
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        y, _ = S.rwkv6_channel_mix(lp["rwkv"], h, cfg)
+        x = x + y
+    elif kind == "mamba":
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        y, _ = S.mamba2_mix(lp["mamba"], h, cfg)
+        x = x + y
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, inputs):
+    """inputs: {"tokens": (B,S)} or {"embeds": (B,S,D)}, optional "positions".
+    Returns (hidden (B,S,D), aux_loss)."""
+    if "embeds" in inputs:
+        x = inputs["embeds"].astype(L.dtype_of(cfg))
+    else:
+        x = L.embed(params["embed"], inputs["tokens"])
+        if cfg.family != "ssm":
+            x = x * float(np.sqrt(cfg.d_model))
+    B, Sq = x.shape[0], x.shape[1]
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+        if cfg.rope_mode == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, B, Sq))
+    x = constrain(x, ("batch", "seq", None))
+    kinds = _layer_kinds(cfg)
+    shared = params.get("shared_attn")
+
+    layer_fn = _apply_layer_train
+    if cfg.remat and len(kinds) > 1:
+        # nested remat: the superblock checkpoint stores only its input; each
+        # inner layer is checkpointed again so the superblock's backward pass
+        # holds one layer's intermediates at a time, not all of them (§Perf)
+        layer_fn = jax.checkpoint(_apply_layer_train, static_argnums=(0, 4))
+
+    def sb_fn(x, sb_params):
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(kinds):
+            x, a = layer_fn(kind, sb_params[f"l{i}"], x, positions, cfg, shared)
+            aux = aux + a
+        x = constrain(x, ("batch", "seq", None))
+        return x, aux
+
+    if cfg.remat:
+        sb_fn = jax.checkpoint(sb_fn)
+
+    def scan_body(x, sb_params):
+        return sb_fn(x, sb_params)
+
+    x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.sum(auxs)
+
+
+def logits(cfg: ModelConfig, params, hidden):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], hidden)
+    return jnp.einsum("...d,dv->...v", hidden, params["lm_head"]["w"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Chunked cross-entropy: scans over sequence chunks so the (B,S,V) logits
+    tensor is never materialized (vocabs up to 262k)."""
+    hidden, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    B, Sq, D = hidden.shape
+    chunk = min(cfg.loss_chunk, Sq)
+    nc = Sq // chunk
+    head = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]["w"].T
+    # head: (V, D)
+
+    hc = hidden.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(tot, inp):
+        # rematerialized: the (B, chunk, V) logits block is recomputed in the
+        # backward pass instead of being stored (vocab up to 262k).
+        # gold logit via one-hot contraction, NOT take_along_axis: the gather
+        # would force an all-gather of the vocab-sharded logits (§Perf).
+        h, lab = inp
+        lg = jnp.einsum("bcd,vd->bcv", h, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        onehot = (lab[..., None] == jnp.arange(lg.shape[-1])).astype(jnp.float32)
+        gold = jnp.sum(lg * onehot, axis=-1)
+        return tot + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), (hc, lc))
+    ce = total / (B * Sq)
+    return ce + 0.01 * aux
+
+
+# --------------------------------------------------------------------- decode
+def _layer_cache(kind, cfg, batch, max_len):
+    if kind in ("attn", "moe_attn", "global", "shared_attn"):
+        window = cfg.window_size if cfg.attention_type == "sliding" else None
+        return A.init_kv_cache(cfg, batch, max_len, window=window)
+    if kind == "local":
+        return A.init_kv_cache(cfg, batch, max_len, window=cfg.window_size)
+    if kind == "rwkv":
+        return S.init_rwkv6_state(cfg, batch)
+    if kind == "mamba":
+        return S.init_mamba2_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch, max_len):
+    n_sb, _ = superblock_layout(cfg)
+    kinds = _layer_kinds(cfg)
+    one = {f"l{i}": _layer_cache(k, cfg, batch, max_len) for i, k in enumerate(kinds)}
+    # stack per superblock
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape), one)
+
+
+def _apply_layer_decode(kind, lp, cache, x, index, cfg, shared):
+    if kind in ("attn", "local", "global", "moe_attn", "shared_attn"):
+        p = shared if kind == "shared_attn" else lp
+        window = None
+        if kind == "local" or (cfg.attention_type == "sliding" and kind in ("attn", "moe_attn")):
+            window = cfg.window_size
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = A.attention_decode(p["attn"], h, cache, index, cfg, window=window)
+        x = x + y
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "moe_attn":
+            x = x + M.moe_apply(lp["moe"], h, cfg)
+        else:
+            x = x + L.swiglu(p["mlp"], h)
+    elif kind == "rwkv":
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        y, new = S.rwkv6_mix(lp["rwkv"], h, cfg,
+                             state={"S": cache["S"], "prev": cache["prev"]})
+        x = x + y
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        y, prev_cm = S.rwkv6_channel_mix(lp["rwkv"], h, cfg, state=cache["prev_cm"])
+        x = x + y
+        cache = {"S": new["S"], "prev": new["prev"], "prev_cm": prev_cm}
+    elif kind == "mamba":
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        y, cache = S.mamba2_mix(lp["mamba"], h, cfg, state=cache)
+        x = x + y
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.swiglu(lp["mlp"], h)
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params, state, inputs, index):
+    """One-token decode. inputs: {"token": (B,)} or {"embed": (B,D)}.
+    index: scalar int32 absolute position. Returns (logits (B,V), new_state)."""
+    if "embed" in inputs:
+        x = inputs["embed"][:, None, :].astype(L.dtype_of(cfg))
+    else:
+        x = L.embed(params["embed"], inputs["token"][:, None])
+        if cfg.family != "ssm":
+            x = x * float(np.sqrt(cfg.d_model))
+    kinds = _layer_kinds(cfg)
+    shared = params.get("shared_attn")
+
+    def scan_body(x, sb):
+        sb_params, sb_cache = sb
+        new_cache = {}
+        for i, kind in enumerate(kinds):
+            x, c = _apply_layer_decode(kind, sb_params[f"l{i}"], sb_cache[f"l{i}"],
+                                       x, index, cfg, shared)
+            new_cache[f"l{i}"] = c
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["blocks"], state))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(cfg, params, x)[:, 0]
+    return lg, new_caches

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OPTIMIZERS, Optimizer, make_optimizer,
+)

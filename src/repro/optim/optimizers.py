@@ -1,0 +1,172 @@
+"""Weight update rules — survey Table 3, implemented exactly as printed.
+
+Each rule is a pure (init_state, update) pair over arbitrary parameter
+pytrees. Master weights and moments are f32 regardless of param dtype
+(mixed-precision training; survey §6.3 quantization applies to *gradients*).
+
+Table 3 rules:
+  sgd        w ← w − η·g
+  adaptive   w ← w − η_t·g                       (η_t decays)
+  momentum   w ← w + μ(w − w_prev) − η·g          [Qian 1999]
+  nesterov   v ← μv − η·∇ℓ(w + μv);  w ← w + v    [Nesterov 1983]
+  adagrad    A += g²;  w ← w − η·g/√(A+ε)         [Duchi et al. 2011]
+  rmsprop    A' = βA' + (1−β)g²;  w ← w − η·g/√(A'+ε)   [Hinton 2012]
+  adam       m̂, v̂ bias-corrected first/second moments  [Kingma & Ba 2015]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _f32(tree):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), tree)
+
+
+def _zeros(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def make_optimizer(name: str, lr: float = 1e-3, *, momentum: float = 0.9,
+                   beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
+                   decay_steps: int = 10_000, weight_decay: float = 0.0,
+                   grad_clip: float = 0.0) -> Optimizer:
+    """Build an update rule. `grad_clip` applies global-norm clipping
+    (survey §3.2, gradient clipping for RNNs / async updates)."""
+
+    def clip(grads):
+        if not grad_clip:
+            return grads
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / (gn + 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads)
+
+    def finish(new_master, params, extra, step):
+        new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), new_master, params)
+        return new_params, {"master": new_master, "step": step + 1, **extra}
+
+    # ------------------------------------------------------------------ rules
+    if name == "sgd":
+        def init(params):
+            return {"master": _f32(params), "step": jnp.int32(0)}
+
+        def update(grads, state, params):
+            grads = clip(grads)
+            new = jax.tree.map(lambda w, g: w - lr * g.astype(jnp.float32),
+                               state["master"], grads)
+            return finish(new, params, {}, state["step"])
+
+    elif name == "adaptive":
+        def init(params):
+            return {"master": _f32(params), "step": jnp.int32(0)}
+
+        def update(grads, state, params):
+            grads = clip(grads)
+            t = state["step"].astype(jnp.float32)
+            lr_t = lr / (1.0 + t / decay_steps)
+            new = jax.tree.map(lambda w, g: w - lr_t * g.astype(jnp.float32),
+                               state["master"], grads)
+            return finish(new, params, {}, state["step"])
+
+    elif name == "momentum":
+        def init(params):
+            m = _f32(params)
+            return {"master": m, "prev": m, "step": jnp.int32(0)}
+
+        def update(grads, state, params):
+            grads = clip(grads)
+            new = jax.tree.map(
+                lambda w, wp, g: w + momentum * (w - wp) - lr * g.astype(jnp.float32),
+                state["master"], state["prev"], grads)
+            return finish(new, params, {"prev": state["master"]}, state["step"])
+
+    elif name == "nesterov":
+        def init(params):
+            return {"master": _f32(params), "vel": _zeros(params), "step": jnp.int32(0)}
+
+        def update(grads, state, params):
+            # caller evaluates grads at the lookahead point w + μv by reading
+            # `lookahead(state)`; falls back to standard momentum on plain grads
+            grads = clip(grads)
+            vel = jax.tree.map(lambda v, g: momentum * v - lr * g.astype(jnp.float32),
+                               state["vel"], grads)
+            new = jax.tree.map(lambda w, v: w + v, state["master"], vel)
+            return finish(new, params, {"vel": vel}, state["step"])
+
+    elif name == "adagrad":
+        def init(params):
+            return {"master": _f32(params), "accum": _zeros(params), "step": jnp.int32(0)}
+
+        def update(grads, state, params):
+            grads = clip(grads)
+            accum = jax.tree.map(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                                 state["accum"], grads)
+            new = jax.tree.map(
+                lambda w, g, a: w - lr * g.astype(jnp.float32) / jnp.sqrt(a + eps),
+                state["master"], grads, accum)
+            return finish(new, params, {"accum": accum}, state["step"])
+
+    elif name == "rmsprop":
+        def init(params):
+            return {"master": _f32(params), "accum": _zeros(params), "step": jnp.int32(0)}
+
+        def update(grads, state, params):
+            grads = clip(grads)
+            accum = jax.tree.map(
+                lambda a, g: beta2 * a + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+                state["accum"], grads)
+            new = jax.tree.map(
+                lambda w, g, a: w - lr * g.astype(jnp.float32) / (jnp.sqrt(a) + eps),
+                state["master"], grads, accum)
+            return finish(new, params, {"accum": accum}, state["step"])
+
+    elif name == "adam":
+        def init(params):
+            return {"master": _f32(params), "m": _zeros(params), "v": _zeros(params),
+                    "step": jnp.int32(0)}
+
+        def update(grads, state, params):
+            grads = clip(grads)
+            t = state["step"].astype(jnp.float32) + 1.0
+            m = jax.tree.map(lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32),
+                             state["m"], grads)
+            v = jax.tree.map(lambda v_, g: beta2 * v_ + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+                             state["v"], grads)
+            bc1 = 1.0 - beta1 ** t
+            bc2 = 1.0 - beta2 ** t
+
+            def upd(w, m_, v_):
+                mh = m_ / bc1
+                vh = v_ / bc2
+                step = lr * mh / (jnp.sqrt(vh) + eps)
+                if weight_decay:
+                    step = step + lr * weight_decay * w
+                return w - step
+
+            new = jax.tree.map(upd, state["master"], m, v)
+            return finish(new, params, {"m": m, "v": v}, state["step"])
+
+    else:
+        raise ValueError(f"unknown optimizer {name!r}")
+
+    return Optimizer(name, init, update)
+
+
+def lookahead(state, momentum=0.9):
+    """Nesterov lookahead point w + μv (Table 3's ∇ℓ(w^(t) − μ·v_t, z))."""
+    return jax.tree.map(lambda w, v: w + momentum * v, state["master"], state["vel"])
+
+
+OPTIMIZERS = ("sgd", "adaptive", "momentum", "nesterov", "adagrad", "rmsprop", "adam")

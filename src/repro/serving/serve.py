@@ -1,0 +1,78 @@
+"""Batched serving: prefill + token-by-token decode with KV/recurrent cache.
+
+`make_serve_step` builds the jitted one-token step used by the decode dry-run
+shapes (decode_32k, long_500k): ONE new token against a cache of seq_len.
+`generate` drives a full sampling loop (used by examples/serve_demo.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import parallelism as par
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg, plan=None):
+    """serve_step(params, cache, inputs, index) -> (logits (B,V), new cache)."""
+
+    def serve_step(params, cache, inputs, index):
+        ctx = par.plan_context(plan) if plan is not None else _null()
+        with ctx:
+            return T.decode_step(cfg, params, cache, inputs, index)
+
+    return serve_step
+
+
+def jit_serve_step(cfg, plan, params_abs, cache_abs, inputs_abs):
+    step = make_serve_step(cfg, plan)
+    p_sh = plan.param_shardings(params_abs)
+    c_sh = plan.cache_shardings(cache_abs)
+    i_sh = jax.tree.map(
+        lambda l: NamedSharding(plan.mesh, plan.spec_for_batch_leaf("token", l.shape)),
+        inputs_abs)
+    rep = NamedSharding(plan.mesh, P())
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, i_sh, rep),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def sample(logits, key, temperature=1.0):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(cfg, params, prompt_tokens, max_new, *, key=None, temperature=0.0,
+             max_len=None):
+    """Greedy/temperature generation for token-input models (examples only;
+    runs the decode step sequentially, prefill included)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B, S0 = prompt_tokens.shape
+    max_len = max_len or (S0 + max_new)
+    cache = T.init_decode_state(cfg, B, max_len)
+    step = jax.jit(lambda p, c, tok, i: T.decode_step(cfg, p, c, {"token": tok}, i))
+
+    tok = prompt_tokens[:, 0]
+    logits = None
+    for i in range(S0):  # prefill token-by-token (simple and correct)
+        logits, cache = step(params, cache, prompt_tokens[:, i], jnp.int32(i))
+    out = []
+    for j in range(max_new):
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub, temperature)
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(S0 + j))
+    return jnp.stack(out, axis=1)

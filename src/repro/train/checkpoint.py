@@ -1,0 +1,58 @@
+"""Checkpointing: pytree <-> .npz with path-encoded keys (survey §6.2:
+"the simplest form of fault tolerance in machine learning is
+checkpoint/restart"). Host-gathered; restore re-shards via device_put."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)   # npz-portable; bf16→f32 lossless
+        out[key] = arr
+    return out
+
+
+def save(path: str, tree, step: int = 0) -> str:
+    arrays = _flatten(tree)
+    arrays["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def restore(path: str, template, shardings=None):
+    """Restore into `template`'s structure; optionally device_put with
+    shardings (same structure)."""
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    step = int(arrays.pop("__step__", 0))
+    flat = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path_keys, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path_keys)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = jnp.asarray(arrays[key], dtype=leaf.dtype)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree, step

@@ -1,0 +1,70 @@
+"""§6.1 model-consistency tests: the staleness/convergence trade-off."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consistency as cons
+
+
+def quadratic_problem(n_steps=200, dim=20, seed=0):
+    key = jax.random.PRNGKey(seed)
+    A = jnp.diag(jax.random.uniform(key, (dim,), minval=0.5, maxval=3.0))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (dim,))
+
+    def loss(params, batch):
+        w = params["w"]
+        noise = batch
+        return 0.5 * w @ A @ w - (b + noise) @ w
+
+    batches = jax.random.normal(jax.random.PRNGKey(2), (n_steps, dim)) * 0.05
+    params0 = {"w": jnp.zeros(dim)}
+    opt = jnp.linalg.solve(A, b)
+    return loss, params0, batches, opt
+
+
+class TestStaleSGD:
+    def test_synchronous_converges(self):
+        loss, p0, batches, opt = quadratic_problem()
+        final, losses = cons.simulate_stale_sgd(loss, p0, batches, lr=0.1,
+                                                staleness=0)
+        assert float(jnp.linalg.norm(final["w"] - opt)) < 0.2
+
+    def test_bounded_staleness_still_converges(self):
+        """SSP's claim [Ho et al. 2013]: bounded staleness retains convergence."""
+        loss, p0, batches, opt = quadratic_problem()
+        final, _ = cons.simulate_stale_sgd(loss, p0, batches, lr=0.05,
+                                           staleness=4)
+        assert float(jnp.linalg.norm(final["w"] - opt)) < 0.4
+
+    def test_staleness_monotonically_hurts(self):
+        """The survey's Fig 28 spectrum: more staleness → worse (or equal)
+        final error at fixed lr."""
+        loss, p0, batches, opt = quadratic_problem(n_steps=150)
+        errs = []
+        for s in (0, 2, 8):
+            final, _ = cons.simulate_stale_sgd(loss, p0, batches, lr=0.1,
+                                               staleness=s)
+            errs.append(float(jnp.linalg.norm(final["w"] - opt)))
+        assert errs[0] <= errs[1] * 1.05
+        assert errs[1] <= errs[2] * 1.05
+
+    def test_excessive_staleness_with_high_lr_diverges(self):
+        """The survey's motivation for staleness bounds + lr adaptation
+        [Gupta et al. 2016]: stale gradients at aggressive lr oscillate."""
+        loss, p0, batches, opt = quadratic_problem(n_steps=150)
+        f_sync, _ = cons.simulate_stale_sgd(loss, p0, batches, lr=0.55,
+                                            staleness=0)
+        f_stale, _ = cons.simulate_stale_sgd(loss, p0, batches, lr=0.55,
+                                             staleness=8)
+        err_sync = float(jnp.linalg.norm(f_sync["w"] - opt))
+        err_stale = float(jnp.linalg.norm(f_stale["w"] - opt))
+        assert err_stale > 2 * err_sync or not np.isfinite(err_stale)
+
+
+class TestAsyncAgents:
+    def test_downpour_sim_converges(self):
+        loss, p0, batches, opt = quadratic_problem(n_steps=300)
+        final, losses = cons.simulate_async_agents(loss, p0, batches, lr=0.05,
+                                                   agents=4)
+        assert float(jnp.linalg.norm(final["w"] - opt)) < 0.5

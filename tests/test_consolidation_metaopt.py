@@ -1,0 +1,105 @@
+"""§6.4 consolidation + §6.5 meta-optimization tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consolidation as con
+from repro.core import metaopt as mo
+
+
+def quad(seed=0, dim=12):
+    key = jax.random.PRNGKey(seed)
+    A = jnp.diag(jax.random.uniform(key, (dim,), minval=0.5, maxval=3.0))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (dim,))
+    sol = jnp.linalg.solve(A, b)
+
+    def loss(w, batch=None):
+        noise = 0.0 if batch is None else batch
+        return 0.5 * w["w"] @ A @ w["w"] - (b + noise) @ w["w"]
+
+    return loss, {"w": jnp.zeros(dim)}, sol
+
+
+class TestEnsembles:
+    def test_ensemble_reduces_prediction_variance(self):
+        """§6.4.1: averaging m independently-noisy members reduces error."""
+        key = jax.random.PRNGKey(0)
+        true_w = jax.random.normal(key, (8,))
+        members = [{"w": true_w + 0.3 * jax.random.normal(jax.random.PRNGKey(i), (8,))}
+                   for i in range(8)]
+        x = jax.random.normal(jax.random.PRNGKey(99), (16, 8))
+        apply_fn = lambda w, x_: x_ @ w["w"]
+        single_err = float(jnp.mean((apply_fn(members[0], x) - x @ true_w) ** 2))
+        ens_err = float(jnp.mean((con.ensemble_logits(apply_fn, members, x)
+                                  - x @ true_w) ** 2))
+        assert ens_err < single_err / 2
+
+    def test_distill_loss_zero_when_matched(self):
+        lg = jax.random.normal(jax.random.PRNGKey(0), (4, 10))
+        assert float(con.distill_loss(lg, lg)) == pytest.approx(
+            float(con.distill_loss(lg, lg)))
+        assert float(con.distill_loss(lg, lg)) <= float(con.distill_loss(lg, -lg))
+
+
+class TestEASGD:
+    def test_agents_and_center_converge(self):
+        loss, w0, sol = quad()
+        agents = [jax.tree.map(lambda p: p + 0.5 * i, w0) for i in range(4)]
+        center = w0
+        gfn = jax.grad(lambda w: loss(w))
+        for _ in range(300):
+            grads = [gfn(w) for w in agents]
+            agents, center = con.easgd_round(agents, center, grads,
+                                             lr=0.1, rho=0.05)
+        err = float(jnp.linalg.norm(center["w"] - sol))
+        assert err < 0.3
+
+    def test_periodic_averaging_converges(self):
+        loss, w0, sol = quad()
+        batches = jax.random.normal(jax.random.PRNGKey(2), (60, 12)) * 0.05
+        final, losses = con.periodic_average_sgd(
+            lambda w, b: loss(w, b), w0, batches, agents=3, lr=0.1,
+            avg_every=10)
+        assert float(jnp.linalg.norm(final["w"] - sol)) < 0.4
+        assert losses[-1] < losses[0]
+
+
+class TestMetaOpt:
+    def make_train_eval(self):
+        loss, w0, sol = quad()
+        gfn = jax.jit(jax.grad(lambda w: loss(w)))
+
+        def train_eval(hypers, steps, state):
+            w = state if state is not None else w0
+            for _ in range(steps):
+                g = gfn(w)
+                w = jax.tree.map(lambda p, g_: p - hypers["lr"] * g_, w, g)
+            return w, -float(loss(w))       # higher is better
+
+        return train_eval
+
+    def test_grid_search_finds_reasonable_lr(self):
+        te = self.make_train_eval()
+        best, score, table = mo.grid_search(
+            te, {"lr": [1e-4, 1e-2, 0.2, 2.0]}, steps=40)
+        assert best["lr"] == 0.2            # 2.0 diverges (λmax·lr > 2)
+        assert len(table) == 4
+
+    def test_random_search_runs(self):
+        te = self.make_train_eval()
+        best, score, table = mo.random_search(
+            te, {"lr": (1e-4, 1.0)}, steps=30, trials=8)
+        assert len(table) == 8 and best is not None
+
+    def test_pbt_improves_over_rounds_and_beats_worst_seed(self):
+        te = self.make_train_eval()
+        init = [{"lr": v} for v in (1e-4, 1e-3, 0.05, 0.3)]
+        best, hist = mo.population_based_training(
+            te, init, population=4, rounds=6, steps_per_round=15)
+        first_best = max(s for _, s in hist[0])
+        last_best = max(s for _, s in hist[-1])
+        assert last_best >= first_best
+        # the bad seeds got replaced: final population no longer contains 1e-4
+        final_lrs = [h["lr"] for h, _ in hist[-1]]
+        assert min(final_lrs) > 1e-4

@@ -1,0 +1,80 @@
+"""§2.5 collective cost-model tests — the paper's formulas and bounds."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+
+P_pow2 = st.sampled_from([2, 4, 8, 16, 64, 256])
+msg = st.integers(min_value=1, max_value=10**9)
+
+
+class TestPaperFormulas:
+    @given(P=P_pow2, m=msg)
+    @settings(max_examples=60, deadline=None)
+    def test_butterfly_half_of_tree(self, P, m):
+        """T_tree = 2·log2(P)(L+γmG); T_bfly is exactly half."""
+        L, G = 1e-6, 1e-9
+        assert cm.t_tree(P, m, L, G) == pytest.approx(2 * cm.t_butterfly(P, m, L, G))
+
+    @given(P=P_pow2, m=msg)
+    @settings(max_examples=60, deadline=None)
+    def test_rabenseifner_achieves_lower_bound_bandwidth(self, P, m):
+        """'This algorithm achieves the lower bound' — for the bandwidth term
+        (latency term is 2× the bound's)."""
+        L, G = 0.0, 1e-9
+        assert cm.t_rabenseifner(P, m, L, G) == pytest.approx(
+            cm.t_lower_bound(P, m, L, G))
+
+    @given(P=P_pow2, m=msg)
+    @settings(max_examples=80, deadline=None)
+    def test_no_algorithm_beats_lower_bound(self, P, m):
+        L, G = 1e-6, 1e-9
+        lb = cm.t_lower_bound(P, m, L, G)
+        for f in (cm.t_tree, cm.t_butterfly, cm.t_pipeline, cm.t_rabenseifner):
+            assert f(P, m, L, G) >= lb * (1 - 1e-12)
+
+    def test_regime_crossover(self):
+        """§2.5: butterfly near-optimal for small γm; pipeline bandwidth-
+        optimal for large γm and small P."""
+        L, G = 1e-6, 1e-10
+        small = cm.best_allreduce(256, 64, L, G)[0]
+        large = cm.best_allreduce(4, 10**9, L, G)[0]
+        assert small == "butterfly"
+        assert large in ("ring", "rabenseifner")
+
+    def test_ps_equals_tree(self):
+        """§6.2: PS communication ≡ reduce-then-broadcast = T_tree."""
+        assert cm.t_parameter_server(64, 10**6, 1e-6, 1e-9) == \
+            cm.t_tree(64, 10**6, 1e-6, 1e-9)
+
+
+class TestParallelismVolumes:
+    def test_hybrid_beats_pure_dp_for_fc_heavy(self):
+        """§5.4 'one weird trick': AlexNet-like nets (few conv params, huge FC
+        params) communicate less with hybrid DP(conv)+MP(fc)."""
+        n_conv, n_fc = 3.7e6, 58.6e6          # AlexNet split
+        batch, fc_width = 256, 4096
+        dp = cm.dp_comm_bytes(n_conv + n_fc)
+        hybrid = cm.hybrid_comm_bytes(n_conv, n_fc, batch, fc_width * 2)
+        assert hybrid < dp / 5
+
+    @given(S=st.integers(2, 64), M=st.integers(1, 512))
+    @settings(max_examples=50, deadline=None)
+    def test_pipeline_bubble(self, S, M):
+        f = cm.pipeline_bubble_fraction(S, M)
+        assert 0 <= f < 1
+        # more microbatches → smaller bubble (§5.3)
+        assert cm.pipeline_bubble_fraction(S, M + 1) <= f
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        t = cm.roofline_terms(1e18, 1e15, 1e13, chips=256)
+        assert t["compute_s"] == pytest.approx(1e18 / (256 * 197e12))
+        assert cm.dominant_term({"compute_s": 3, "memory_s": 1, "collective_s": 2}) \
+            == "compute_s"
+
+    def test_model_flops(self):
+        assert cm.model_flops(1e9, 1e6) == 6e15

@@ -1,0 +1,112 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles, executed
+with interpret=True on CPU (deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.matmul import matmul, matmul_ref
+from repro.kernels.quantize import dequantize_blocks, quantize_blocks
+from repro.kernels.quantize.ref import dequantize_blocks_ref, quantize_blocks_ref
+
+
+class TestMatmulSweep:
+    @pytest.mark.parametrize("M,K,N", [
+        (128, 128, 128), (256, 512, 128), (128, 1024, 256), (384, 256, 640),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose_vs_ref(self, M, K, N, dtype):
+        ka, kb = jax.random.split(jax.random.PRNGKey(M + N))
+        a = jax.random.normal(ka, (M, K), jnp.float32).astype(dtype)
+        b = jax.random.normal(kb, (K, N), jnp.float32).astype(dtype)
+        out = matmul(a, b, block_m=128, block_n=128, block_k=128)
+        ref = matmul_ref(a, b)
+        tol = 2e-6 * K if dtype == jnp.float32 else 0.15
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=0.05)
+
+    def test_block_shape_invariance(self):
+        a = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+        outs = [np.asarray(matmul(a, b, block_m=bm, block_n=bn, block_k=bk))
+                for bm, bn, bk in [(64, 64, 64), (128, 256, 128), (256, 256, 512)]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-4)
+
+
+class TestFlashAttentionSweep:
+    @pytest.mark.parametrize("S,H,Hkv,hd", [
+        (128, 4, 4, 64), (256, 4, 2, 64), (256, 8, 1, 128), (512, 2, 2, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_allclose(self, S, H, Hkv, hd, dtype):
+        B = 2
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(S + hd), 3)
+        q = jax.random.normal(k1, (B, S, H, hd), jnp.float32).astype(dtype)
+        k = jax.random.normal(k2, (B, S, Hkv, hd), jnp.float32).astype(dtype)
+        v = jax.random.normal(k3, (B, S, Hkv, hd), jnp.float32).astype(dtype)
+        out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        rep = H // Hkv
+        kk, vv = jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2)
+        tb = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        ref = attention_ref(tb(q), tb(kk), tb(vv), causal=True) \
+            .reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+        tol = 1e-5 if dtype == jnp.float32 else 0.08
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=tol)
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_sliding_window(self, window):
+        B, S, H, hd = 1, 256, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(window), 3)
+        q, k, v = (jax.random.normal(kk, (B, S, H, hd)) for kk in ks)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+        tb = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        ref = attention_ref(tb(q), tb(k), tb(v), causal=True, window=window) \
+            .reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+    def test_matches_model_chunked_attention_semantics(self):
+        """The kernel and the model's XLA chunked path agree."""
+        from repro.models import attention as A
+        B, S, H, hd = 1, 128, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q, k, v = (jax.random.normal(kk, (B, S, H, hd), jnp.float32) for kk in ks)
+        out_kernel = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        out_model = A._chunked_attention(q, k, v, n_rep=1, scale=hd ** -0.5,
+                                         chunk=32, window=None)
+        np.testing.assert_allclose(np.asarray(out_kernel),
+                                   np.asarray(out_model), atol=2e-5)
+
+
+class TestQuantizeSweep:
+    @pytest.mark.parametrize("n", [256, 1000, 4096, 65_537])
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_kernel_equals_ref(self, n, bits):
+        key = jax.random.PRNGKey(n + bits)
+        flat = jax.random.normal(key, (n,)) * 0.02
+        q, s = quantize_blocks(flat, key, bits=bits)
+        pad = (-n) % 256
+        x = jnp.pad(flat, (0, pad)).reshape(-1, 256)
+        noise = jax.random.uniform(key, x.shape)
+        qr, sr = quantize_blocks_ref(x, noise, bits=bits)
+        assert bool(jnp.all(q == qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+    def test_roundtrip_bounded_error(self):
+        key = jax.random.PRNGKey(5)
+        flat = jax.random.normal(key, (8192,))
+        q, s = quantize_blocks(flat, key, bits=8)
+        deq = dequantize_blocks(q, s, n=8192)
+        # error per element ≤ scale = max|block|/127
+        err = float(jnp.max(jnp.abs(deq - flat)))
+        assert err <= float(jnp.max(s)) + 1e-6
+
+    def test_zero_block_safe(self):
+        flat = jnp.zeros((512,))
+        q, s = quantize_blocks(flat, jax.random.PRNGKey(0))
+        deq = dequantize_blocks(q, s, n=512)
+        assert bool(jnp.all(deq == 0))

@@ -1,0 +1,148 @@
+"""Model-layer tests: norms, RoPE, attention semantics, decode==forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, get_config, reduced
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class TestLayers:
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def test_rmsnorm_unit_rms(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 5
+        p = L.init_rmsnorm(64)
+        y = L.rmsnorm(p, x)
+        rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, axis=-1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 64))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        y = L.apply_rope(x, pos)
+        np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                                   np.asarray(jnp.linalg.norm(x, axis=-1)),
+                                   rtol=1e-4)
+
+    def test_rope_relative_position(self):
+        """⟨rope(q,i), rope(k,j)⟩ depends only on i−j."""
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 64))
+
+        def dot_at(i, j):
+            qi = L.apply_rope(q, jnp.asarray([[i]]))
+            kj = L.apply_rope(k, jnp.asarray([[j]]))
+            return float(jnp.sum(qi * kj))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-3)
+        assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+    def test_mrope_matches_rope_when_streams_equal(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 4, 64))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+        np.testing.assert_allclose(
+            np.asarray(L.apply_mrope(x, pos3)),
+            np.asarray(L.apply_rope(x, pos)), rtol=2e-3, atol=2e-3)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="tiny", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=97, loss_chunk=16, attn_chunk=16, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestAttention:
+    def test_chunked_equals_naive(self):
+        cfg = tiny_cfg(attn_chunk=8)
+        p = A.init_attention(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64), jnp.float32) \
+            .astype(jnp.bfloat16)
+        pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+        out_c = A.attention_train(p, x, pos, cfg, impl="chunked")
+        out_n = A.attention_train(p, x, pos, cfg, impl="naive")
+        np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                                   np.asarray(out_n, np.float32),
+                                   atol=0.15, rtol=0.1)
+
+    def test_sliding_window_masks_past(self):
+        """Token far past the window cannot influence the output."""
+        cfg = tiny_cfg(attention_type="sliding", window_size=8, attn_chunk=16)
+        p = A.init_attention(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64)).astype(jnp.bfloat16)
+        pos = jnp.arange(64)[None]
+        y1 = A.attention_train(p, x, pos, cfg, window=8)
+        x2 = x.at[0, 0].set(100.0)          # perturb token 0
+        y2 = A.attention_train(p, x2, pos, cfg, window=8)
+        # last token (pos 63) is > window away from token 0 → unchanged
+        np.testing.assert_allclose(np.asarray(y1[0, -1], np.float32),
+                                   np.asarray(y2[0, -1], np.float32), atol=1e-2)
+        assert not np.allclose(np.asarray(y1[0, 1], np.float32),
+                               np.asarray(y2[0, 1], np.float32), atol=1e-2)
+
+
+FAMILIES = ["dense", "sliding", "local_global", "moe", "ssm", "hybrid"]
+
+
+def family_cfg(fam):
+    if fam == "dense":
+        return tiny_cfg()
+    if fam == "sliding":
+        return tiny_cfg(attention_type="sliding", window_size=8)
+    if fam == "local_global":
+        return tiny_cfg(attention_type="local_global", local_global_ratio=1)
+    if fam == "moe":
+        return tiny_cfg(family="moe", num_experts=4, experts_per_token=2)
+    if fam == "ssm":
+        return tiny_cfg(family="ssm", ssm_type="rwkv6", num_heads=2,
+                        num_kv_heads=2, ssm_head_dim=32, rope_mode="none")
+    if fam == "hybrid":
+        return tiny_cfg(family="hybrid", ssm_type="mamba2", ssm_state_dim=16,
+                        ssm_head_dim=32, hybrid_ssm_per_attn=1)
+    raise ValueError(fam)
+
+
+class TestDecodeMatchesForward:
+    """The critical cache-correctness property: token-by-token decode must
+    reproduce the teacher-forced forward logits for every family."""
+
+    @pytest.mark.parametrize("fam", FAMILIES)
+    def test_decode_equals_forward(self, fam):
+        cfg = family_cfg(fam)
+        S = 16
+        key = jax.random.PRNGKey(0)
+        params = T.init_params(cfg, key)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab_size)
+        hidden, _ = T.forward(cfg, params, {"tokens": tokens})
+        full_logits = T.logits(cfg, params, hidden)          # (2, S, V)
+
+        cache = T.init_decode_state(cfg, 2, S)
+        dec = []
+        for i in range(S):
+            lg, cache = T.decode_step(cfg, params, cache,
+                                      {"token": tokens[:, i]}, jnp.int32(i))
+            dec.append(lg)
+        dec = jnp.stack(dec, axis=1)                         # (2, S, V)
+        np.testing.assert_allclose(np.asarray(dec, np.float32),
+                                   np.asarray(full_logits, np.float32),
+                                   atol=0.35, rtol=0.12)
+
+
+class TestGQA:
+    def test_kv_equal_heads_is_mha(self):
+        cfg_mha = tiny_cfg(num_kv_heads=4)
+        p = A.init_attention(jax.random.PRNGKey(0), cfg_mha)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 64)).astype(jnp.bfloat16)
+        pos = jnp.arange(16)[None]
+        out = A.attention_train(p, x, pos, cfg_mha)
+        assert out.shape == (1, 16, 64)
+        assert not bool(jnp.any(jnp.isnan(out.astype(jnp.float32))))

@@ -1,0 +1,93 @@
+"""Work-Depth model tests — including the paper's pinned LeNet claim."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workdepth as wd
+
+
+class TestLeNetPaperClaim:
+    def test_total_matches_paper(self):
+        """§3.3.1: W = 665,832 and D = 41, exactly."""
+        t = wd.lenet5_inference()
+        assert t.work == 665_832
+        assert t.depth == 41
+
+    def test_per_layer_matches_paper(self):
+        ours = wd.lenet5_layers()
+        for name, (w, d) in wd.LENET5_PAPER.items():
+            if name == "total":
+                continue
+            assert (ours[name].work, ours[name].depth) == (w, d), name
+
+    def test_average_parallelism_high(self):
+        """§3.3.1: 'even the simplest DNN exhibits high levels of
+        concurrency' — W/D in the ten-thousands."""
+        t = wd.lenet5_inference()
+        assert t.avg_parallelism > 10_000
+
+
+dims = st.integers(min_value=1, max_value=64)
+
+
+class TestTable4Properties:
+    @given(n=dims, cin=dims, cout=dims)
+    @settings(max_examples=50, deadline=None)
+    def test_fc_work_depth(self, n, cin, cout):
+        r = wd.fully_connected(n, cin, cout)
+        assert r.work == n * cin * cout
+        assert r.depth == (math.ceil(math.log2(cin)) if cin > 1 else 0)
+
+    @given(n=st.integers(1, 4), h=st.integers(8, 32), cin=st.integers(1, 8),
+           cout=st.integers(1, 8), k=st.sampled_from([1, 3, 5]))
+    @settings(max_examples=50, deadline=None)
+    def test_conv_depth_logarithmic(self, n, h, cin, cout, k):
+        """Table 4: depth is O(log K + log C_in) — i.e. work/depth is large."""
+        r = wd.conv_direct(n, h, h, cin, cout, k, k)
+        assert r.depth <= 3 * math.ceil(math.log2(max(k * k * cin, 2)))
+        assert r.work >= r.depth  # W dominates D (paper's key point)
+
+    @given(n=dims, c=dims, h=st.integers(2, 32))
+    @settings(max_examples=50, deadline=None)
+    def test_work_dominates_depth(self, n, c, h):
+        """Table 4's punchline: work asymptotically dominates depth for every
+        layer type."""
+        for r in (wd.activation(n, c, h, h), wd.batchnorm(n, c, h, h),
+                  wd.pooling(n, c, h, h, 2, 2)):
+            assert r.work >= r.depth
+
+
+class TestTable6ConvAlgorithms:
+    def test_im2col_same_concurrency_as_direct(self):
+        """Table 6: Direct and im2col exhibit the same W and D."""
+        a = wd.conv_direct(4, 32, 32, 16, 32, 3, 3)
+        b = wd.conv_im2col(4, 32, 32, 16, 32, 3, 3)
+        assert (a.work, a.depth) == (b.work, b.depth)
+
+    def test_fft_favors_large_kernels(self):
+        """§4.3: 'the larger the convolution kernels are, the more beneficial
+        FFT becomes' — FFT work is kernel-size independent, direct is not."""
+        direct_small = wd.conv_direct(4, 64, 64, 64, 64, 3, 3)
+        direct_large = wd.conv_direct(4, 64, 64, 64, 64, 13, 13)
+        fft = wd.conv_fft(4, 64, 64, 64, 64)
+        assert direct_large.work > direct_small.work
+        assert fft.work < direct_large.work           # FFT wins at K=13
+        assert fft.work > direct_small.work           # direct wins at K=3
+
+    def test_winograd_small_kernel_work_reduction(self):
+        """Winograd reduces multiplications for small kernels (§4.3)."""
+        direct = wd.conv_direct(1, 32, 32, 64, 64, 3, 3)
+        wino = wd.conv_winograd(1, 32, 32, 64, 64, r=3, m=2)
+        assert wino.work < direct.work
+
+
+class TestTransformerExtension:
+    @pytest.mark.parametrize("arch", ["yi-9b", "mixtral-8x7b", "rwkv6-7b"])
+    def test_whole_network_wd(self, arch):
+        from repro.configs.base import get_config
+        cfg = get_config(arch)
+        r = wd.transformer_train_wd(cfg, batch=256, seq=4096)
+        assert r.work > 1e15           # ~PFLOP-scale step
+        assert r.depth < 1e6           # depth stays tiny vs work
+        assert r.avg_parallelism > 1e9
