@@ -39,10 +39,9 @@ def measured():
         import json, time
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.core.compat import shard_map
         from repro.core import collectives as coll
-        mesh = jax.make_mesh((8,), ('x',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ('x',))
         out = {}
         x = jnp.ones((8, 262144), jnp.float32)
         for alg in coll.ALGORITHMS:

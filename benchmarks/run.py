@@ -15,6 +15,7 @@ MODULES = [
     "benchmarks.sec4_conv_measured",      # §4.3: conv algorithms, measured
     "benchmarks.sec64_sec65_meta",        # §6.4 consolidation + §6.5 meta-opt
     "benchmarks.kernels_bench",           # §4: layer computation kernels
+    "benchmarks.serving_bench",           # §7 inference: engine vs static batch
     "benchmarks.roofline_summary",        # deliverable (g) roofline table
 ]
 

@@ -29,7 +29,9 @@ ALGORITHMS = ("psum", "ring", "tree", "butterfly", "rabenseifner")
 
 
 def _axis_size(axis):
-    return lax.axis_size(axis)
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return int(lax.psum(1, axis))   # older jax: psum of a constant is static
 
 
 def _is_pow2(n):

@@ -1,0 +1,16 @@
+"""jax version compatibility shims (the container pins an older jax than the
+APIs this repo targets)."""
+from __future__ import annotations
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """`jax.shard_map` with the modern keyword signature; falls back to
+    `jax.experimental.shard_map` (where `check_vma` was `check_rep`)."""
+    try:
+        from jax import shard_map as sm
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)

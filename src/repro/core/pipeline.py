@@ -16,7 +16,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
+
+from repro.core.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 

@@ -1,0 +1,110 @@
+"""Paged decode attention Pallas TPU kernel.
+
+The serving engine stores KV in fixed-size blocks of a shared pool; each
+sequence owns a list of block ids (its *block table*). At decode time one
+query token per sequence must attend over its logically-contiguous KV, which
+is physically scattered across the pool.
+
+The kernel uses `PrefetchScalarGridSpec`: the block table and sequence
+lengths are scalar-prefetched so the BlockSpec index maps can address the
+*physical* KV block for grid step (b, p) — the DMA engine walks the block
+table, no host-side gather materializes the sequence. Running online-softmax
+statistics (m, l, acc) live in VMEM scratch that persists across the page
+steps of one sequence, exactly like the flash_attention kernel's kv axis.
+
+Grid: (B, P) with the page axis innermost ("arbitrary" semantics). Pages at
+or beyond seq_len are skipped (`pl.when`), so the work per sequence is
+O(seq_len), not O(P * block_size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, scale, block_size, pages, groups):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    seq_len = lens_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(p * block_size < seq_len)
+    def _compute():
+        H, hd = q_ref.shape[1], q_ref.shape[2]
+        Hkv = H // groups
+        q = q_ref[0].astype(jnp.float32).reshape(Hkv, groups, hd)
+        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)            # (Hkv, bs, hd)
+        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        # batched over kv heads: (Hkv, g, hd) x (Hkv, bs, hd) -> (Hkv, g, bs)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = p * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (Hkv, groups, block_size), 2)
+        s = jnp.where(kpos < seq_len, s, NEG_INF)
+
+        m_prev = m_ref[...]                                        # (Hkv, g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        prob = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, axis=2, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            prob, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)                    # (Hkv, g, hd)
+        m_ref[...] = m_new
+
+    @pl.when(p == pages - 1)
+    def _finish():
+        H, hd = o_ref.shape[1], o_ref.shape[2]
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).reshape(H, hd).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens, *,
+                           scale=None, interpret=False):
+    """q: (B, H, hd); k_pool/v_pool: (N, bs, Hkv, hd) with H % Hkv == 0;
+    block_tables: (B, P) int32; seq_lens: (B,) int32 (0 = inactive slot,
+    current token already written to the pool). Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    N, bs, Hkv, _ = k_pool.shape
+    P = block_tables.shape[1]
+    groups = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    kern = functools.partial(
+        paged_kernel, scale=scale, block_size=bs, pages=P, groups=groups)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens: (b, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, groups, 1), jnp.float32),
+            pltpu.VMEM((Hkv, groups, 1), jnp.float32),
+            pltpu.VMEM((Hkv, groups, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pool, v_pool)

@@ -1,0 +1,24 @@
+"""jit'd wrapper: paged decode attention over block-pooled KV layouts."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
+                    interpret=None):
+    """q: (B, H, hd); k_pool/v_pool: (N, block_size, Hkv, hd); block_tables:
+    (B, P) int32; seq_lens: (B,) int32 — valid tokens per sequence including
+    the current one (0 marks an inactive slot). Returns (B, H, hd)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens,
+                                  interpret=interpret)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for paged decode attention.
+
+One query token per sequence attends over KV stored in a block pool via a
+per-sequence block table. Semantics:
+
+  * ``seq_lens[b]`` counts the valid tokens of sequence ``b`` INCLUDING the
+    current one — the caller writes the current token's K/V into the pool
+    *before* calling (same write-then-attend order as
+    ``models.attention.attention_decode``).
+  * ``seq_lens[b] == 0`` marks an inactive slot: the output row is all zeros.
+  * Table entries past the sequence's last page may point anywhere inside the
+    pool; their contents are masked out.
+"""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens, *, scale=None):
+    """q: (B, H, hd); k_pool/v_pool: (N, bs, Hkv, hd);
+    block_tables: (B, P) int32; seq_lens: (B,) int32. Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    N, bs, Hkv, _ = k_pool.shape
+    P = block_tables.shape[1]
+    g = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    # gather pages -> contiguous (B, P*bs, Hkv, hd) view of each sequence;
+    # GQA stays grouped (no repeated K/V materialization)
+    k = k_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+    v = v_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+    qg = q.reshape(B, Hkv, g, hd)
+
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale                 # (B,Hkv,g,K)
+    valid = jnp.arange(P * bs)[None, :] < seq_lens[:, None]       # (B, P*bs)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    # max-subtracted softmax with a guarded denominator so fully-masked rows
+    # (inactive slots) produce zeros instead of NaN
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.maximum(m, NEG_INF / 2))
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p / denom, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -5,13 +5,21 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # axis_types only exists on newer jax; older versions default to Auto
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16×16 = 256 chips ('data','model'); multi-pod adds a 2-way
     'pod' axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(1,), axes=("data",)):
@@ -22,5 +30,4 @@ def make_host_mesh(shape=(1,), axes=("data",)):
         total *= s
     if total > n_dev:
         shape, axes = (n_dev,), ("data",)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

@@ -67,6 +67,22 @@ def _project_qkv(params, x, positions, cfg, window):
     return q, k, v
 
 
+def _attend_full(q, k, v, n_rep, scale, chunk, window):
+    """Full-sequence causal(+window) attention, dispatching naive/chunked
+    (chunked needs S % chunk == 0; odd lengths take the naive path)."""
+    S = q.shape[1]
+    if S <= chunk or S % chunk != 0:
+        kk = _repeat_kv(k, n_rep)
+        vv = _repeat_kv(v, n_rep)
+        qpos = jnp.arange(S)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+        mask = _mask(qpos, qpos, window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    return _chunked_attention(q, k, v, n_rep, scale, chunk, window)
+
+
 def attention_train(params, x, positions, cfg, *, window=None, impl="chunked"):
     """Self-attention over a full sequence. x: (B,S,D); positions (B,S) or (3,B,S)."""
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -74,18 +90,9 @@ def attention_train(params, x, positions, cfg, *, window=None, impl="chunked"):
     n_rep = h // hkv
     scale = 1.0 / np.sqrt(hd)
     B, S = x.shape[0], x.shape[1]
-    qpos = jnp.arange(S)
 
-    if impl == "naive" or S <= cfg.attn_chunk:
-        kk = _repeat_kv(k, n_rep)
-        vv = _repeat_kv(v, n_rep)
-        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
-        mask = _mask(qpos, qpos, window)
-        scores = jnp.where(mask[None, None], scores, NEG_INF)
-        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
-    else:
-        out = _chunked_attention(q, k, v, n_rep, scale, cfg.attn_chunk, window)
+    chunk = S if impl == "naive" else cfg.attn_chunk
+    out = _attend_full(q, k, v, n_rep, scale, chunk, window)
 
     out = out.reshape(B, S, h * hd)
     return jnp.einsum("bsk,kd->bsd", out, params["wo"])
@@ -142,6 +149,113 @@ def init_kv_cache(cfg, batch, max_len, window=None):
         "k": jnp.zeros((batch, size, hkv, hd), dt),
         "v": jnp.zeros((batch, size, hkv, hd), dt),
     }
+
+
+def attention_prefill(params, x, cache, cfg, *, window=None):
+    """Batched prefill: full-sequence causal attention AND cache fill in ONE
+    pass (vs. the O(S) sequential decode loop). x: (B,S,D) starting at
+    position 0. Writes K/V into the decode cache (ring-aware for
+    sliding-window layers: only the last `window` positions land, at their
+    ring slots). Returns (out (B,S,D), new_cache)."""
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.rope_mode == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, S))
+    q, k, v = _project_qkv(params, x, positions, cfg, window)
+    n_rep = h // hkv
+    scale = 1.0 / np.sqrt(hd)
+    out = _attend_full(q, k, v, n_rep, scale, cfg.attn_chunk, window)
+    out = out.reshape(B, S, h * hd)
+    out = jnp.einsum("bsk,kd->bsd", out, params["wo"])
+
+    Sc = cache["k"].shape[1]
+    keep = min(S, Sc)                       # ring slots are unique for the
+    slots = (jnp.arange(S - keep, S)) % Sc  # last `keep` positions only
+    new_cache = {
+        "k": cache["k"].at[:, slots].set(k[:, S - keep:]),
+        "v": cache["v"].at[:, slots].set(v[:, S - keep:]),
+    }
+    return out, new_cache
+
+
+# ------------------------------------------------------------ paged decode
+def paged_write(kv, k_new, v_new, block_tables, positions, active):
+    """Scatter one token's K/V per sequence into the block pool.
+
+    kv: {"k","v"}: (N, bs, Hkv, hd); k_new/v_new: (B, Hkv, hd);
+    block_tables: (B, P); positions: (B,) absolute token position;
+    active: (B,) bool — inactive rows are dropped (OOB block id)."""
+    N, bs = kv["k"].shape[0], kv["k"].shape[1]
+    B = positions.shape[0]
+    bids = block_tables[jnp.arange(B), positions // bs]
+    bids = jnp.where(active, bids, N)       # OOB => mode="drop"
+    offs = positions % bs
+    return {
+        "k": kv["k"].at[bids, offs].set(k_new, mode="drop"),
+        "v": kv["v"].at[bids, offs].set(v_new, mode="drop"),
+    }
+
+
+def attention_decode_paged(params, x, kv, block_tables, positions, attn_lens,
+                           cfg, *, impl="ref", interpret=None):
+    """One-token decode against a paged KV pool. x: (B,1,D); kv k/v pools
+    (N, bs, Hkv, hd); block_tables (B, P); positions (B,) absolute position of
+    the incoming token; attn_lens (B,) tokens to attend over INCLUDING the new
+    one (0 marks an inactive slot — its write is dropped and its output is
+    garbage the engine ignores). Returns (out (B,1,D), new kv)."""
+    from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B = x.shape[0]
+    pos_b1 = positions[:, None]
+    if cfg.rope_mode == "mrope":
+        pos_b1 = jnp.broadcast_to(pos_b1[None], (3, B, 1))
+    q, k_new, v_new = _project_qkv(params, x, pos_b1, cfg, None)
+    kv = paged_write(kv, k_new[:, 0], v_new[:, 0], block_tables, positions,
+                     attn_lens > 0)
+    if impl == "kernel":
+        out = paged_attention(q[:, 0], kv["k"], kv["v"], block_tables,
+                              attn_lens, interpret=interpret)
+    else:
+        out = paged_attention_ref(q[:, 0], kv["k"], kv["v"], block_tables,
+                                  attn_lens)
+    out = out.reshape(B, 1, h * hd)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
+
+
+def attention_prefill_paged(params, x, kv, table_row, start, valid_len, cfg):
+    """Chunked prefill for ONE sequence against the paged pool. x: (1,C,D) —
+    chunk of the prompt starting at absolute position `start`, of which the
+    first `valid_len` tokens are real (the rest padding). Writes the chunk's
+    K/V into the pool, then attends causally over the whole prefix gathered
+    via the block table. Returns (out (1,C,D), new kv)."""
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    C = x.shape[1]
+    positions = (start + jnp.arange(C))[None]                     # (1, C)
+    if cfg.rope_mode == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, 1, C))
+    q, k, v = _project_qkv(params, x, positions, cfg, None)
+
+    N, bs = kv["k"].shape[0], kv["k"].shape[1]
+    pos = start + jnp.arange(C)
+    bids = jnp.where(jnp.arange(C) < valid_len, table_row[pos // bs], N)
+    offs = pos % bs
+    kv = {
+        "k": kv["k"].at[bids, offs].set(k[0], mode="drop"),
+        "v": kv["v"].at[bids, offs].set(v[0], mode="drop"),
+    }
+
+    P = table_row.shape[0]
+    n_rep = h // hkv
+    kk = _repeat_kv(kv["k"][table_row].reshape(1, P * bs, hkv, hd), n_rep)
+    vv = _repeat_kv(kv["v"][table_row].reshape(1, P * bs, hkv, hd), n_rep)
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    mask = jnp.arange(P * bs)[None, :] <= pos[:, None]            # (C, P*bs)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(1, C, h * hd)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
 
 def attention_decode(params, x, cache, index, cfg, *, window=None):

@@ -298,6 +298,152 @@ def _apply_layer_decode(kind, lp, cache, x, index, cfg, shared):
     return x, cache
 
 
+_ATTN_KINDS = ("attn", "local", "global", "moe_attn", "shared_attn")
+
+
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """True when every layer kind has a one-shot prefill path (attention
+    families; recurrent ssm/hybrid states still prefill token-by-token)."""
+    return all(k in _ATTN_KINDS for k in _layer_kinds(cfg))
+
+
+def _embed_tokens(cfg, params, tokens):
+    x = L.embed(params["embed"], tokens)
+    if cfg.family != "ssm":
+        x = x * float(np.sqrt(cfg.d_model))
+    return x
+
+
+def prefill_step(cfg: ModelConfig, params, state, inputs):
+    """Batched prefill: run the WHOLE prompt through every layer in one jitted
+    call, filling the decode cache (vs. the O(S) sequential reference loop).
+    inputs: {"tokens": (B, S0)}. Returns (logits (B,V) of the last prompt
+    token, new state)."""
+    if not supports_batched_prefill(cfg):
+        raise NotImplementedError(
+            f"batched prefill needs attention-only layers, got {_layer_kinds(cfg)}")
+    x = _embed_tokens(cfg, params, inputs["tokens"])
+    kinds = _layer_kinds(cfg)
+    shared = params.get("shared_attn")
+
+    def scan_body(x, sb):
+        sb_params, sb_cache = sb
+        new_cache = {}
+        for i, kind in enumerate(kinds):
+            p = shared if kind == "shared_attn" else sb_params[f"l{i}"]
+            lp = sb_params[f"l{i}"]
+            window = None
+            if kind == "local" or (cfg.attention_type == "sliding"
+                                   and kind in ("attn", "moe_attn")):
+                window = cfg.window_size
+            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            y, c = A.attention_prefill(p["attn"], h, sb_cache[f"l{i}"], cfg,
+                                       window=window)
+            x = x + y
+            h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if kind == "moe_attn":
+                x = x + M.moe_apply(lp["moe"], h, cfg)
+            else:
+                x = x + L.swiglu(p["mlp"], h)
+            new_cache[f"l{i}"] = c
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["blocks"], state))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(cfg, params, x[:, -1:])[:, 0]
+    return lg, new_caches
+
+
+# -------------------------------------------------------------- paged decode
+def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Per-superblock paged KV pools (n_sb, num_blocks, block_size, Hkv, hd).
+    All layers share ONE block table per sequence; each layer owns its pool
+    storage. Only full-attention families page (sliding windows keep ring
+    caches; ssm states are O(1) and need no paging)."""
+    kinds = _layer_kinds(cfg)
+    if not all(k in _ATTN_KINDS for k in kinds):
+        raise NotImplementedError(f"paged decode needs attention layers, got {kinds}")
+    if cfg.attention_type != "full":
+        raise NotImplementedError("paged decode supports attention_type='full'")
+    n_sb, _ = superblock_layout(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = L.dtype_of(cfg)
+    one = {f"l{i}": {
+        "k": jnp.zeros((num_blocks, block_size, hkv, hd), dt),
+        "v": jnp.zeros((num_blocks, block_size, hkv, hd), dt),
+    } for i in range(len(kinds))}
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape), one)
+
+
+def paged_decode_step(cfg: ModelConfig, params, pool, inputs, block_tables,
+                      positions, attn_lens, *, impl="ref", interpret=None):
+    """One-token decode for a continuous batch of slots. inputs: {"token":
+    (B,)}; block_tables: (B, P); positions: (B,) absolute position of each
+    incoming token; attn_lens: (B,) tokens to attend over including the new
+    one (0 = inactive slot). Returns (logits (B,V), new pool)."""
+    x = _embed_tokens(cfg, params, inputs["token"][:, None])
+    kinds = _layer_kinds(cfg)
+    shared = params.get("shared_attn")
+
+    def scan_body(x, sb):
+        sb_params, sb_pool = sb
+        new_pool = {}
+        for i, kind in enumerate(kinds):
+            p = shared if kind == "shared_attn" else sb_params[f"l{i}"]
+            lp = sb_params[f"l{i}"]
+            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            y, kv = A.attention_decode_paged(
+                p["attn"], h, sb_pool[f"l{i}"], block_tables, positions,
+                attn_lens, cfg, impl=impl, interpret=interpret)
+            x = x + y
+            h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if kind == "moe_attn":
+                x = x + M.moe_apply(lp["moe"], h, cfg)
+            else:
+                x = x + L.swiglu(p["mlp"], h)
+            new_pool[f"l{i}"] = kv
+        return x, new_pool
+
+    x, new_pools = jax.lax.scan(scan_body, x, (params["blocks"], pool))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(cfg, params, x)[:, 0]
+    return lg, new_pools
+
+
+def paged_prefill_step(cfg: ModelConfig, params, pool, tokens, table_row,
+                       start, valid_len):
+    """Chunked prefill of ONE sequence into the paged pool. tokens: (1, C)
+    chunk starting at absolute position `start`, first `valid_len` real.
+    Returns (logits (1,V) of the chunk's last valid token, new pool)."""
+    x = _embed_tokens(cfg, params, tokens)
+    kinds = _layer_kinds(cfg)
+    shared = params.get("shared_attn")
+
+    def scan_body(x, sb):
+        sb_params, sb_pool = sb
+        new_pool = {}
+        for i, kind in enumerate(kinds):
+            p = shared if kind == "shared_attn" else sb_params[f"l{i}"]
+            lp = sb_params[f"l{i}"]
+            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            y, kv = A.attention_prefill_paged(
+                p["attn"], h, sb_pool[f"l{i}"], table_row, start, valid_len, cfg)
+            x = x + y
+            h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if kind == "moe_attn":
+                x = x + M.moe_apply(lp["moe"], h, cfg)
+            else:
+                x = x + L.swiglu(p["mlp"], h)
+            new_pool[f"l{i}"] = kv
+        return x, new_pool
+
+    x, new_pools = jax.lax.scan(scan_body, x, (params["blocks"], pool))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    lg = logits(cfg, params, last)[:, 0]
+    return lg, new_pools
+
+
 def decode_step(cfg: ModelConfig, params, state, inputs, index):
     """One-token decode. inputs: {"token": (B,)} or {"embed": (B,D)}.
     index: scalar int32 absolute position. Returns (logits (B,V), new_state)."""

@@ -1,0 +1,6 @@
+from repro.serving.engine.engine import Engine, EngineConfig
+from repro.serving.engine.paged_cache import BlockPool, BlockPoolError
+from repro.serving.engine.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "EngineConfig", "BlockPool", "BlockPoolError",
+           "Request", "Scheduler"]

@@ -1,0 +1,268 @@
+"""Continuous-batching serving engine front-end.
+
+Wires the host-side scheduler + block-pool bookkeeping to two jitted device
+functions over the paged KV pool:
+
+  * ``paged_prefill_step`` — one prompt chunk of one sequence (chunked
+    prefill; the chunk length is static so there is exactly one compilation).
+  * ``paged_decode_step``  — one token for EVERY decoding slot at once; new
+    requests join and finished requests leave the batch between steps without
+    recompilation (shapes are fixed at max_slots).
+
+All per-slot batch state (next token, sequence lengths, active mask, block
+tables) is DEVICE-resident and greedy sampling happens inside the jitted
+step, so the steady-state decode loop is a single dispatch per step with no
+host round-trip — the python scheduler runs ahead of the device and steps
+pipeline. Host↔device traffic happens only at request lifecycle events
+(admit / prefill chunk / finish) and for requests that need host-side
+decisions (temperature sampling, stop_token scanning). Generated tokens are
+recorded as whole per-step vectors and materialized once at drain.
+
+Greedy outputs are bit-identical to ``serve.generate``. A ``ShardingPlan``
+may be passed for multi-device serving: params are placed by the plan's
+rules and all device steps run under the plan context so activation
+constraints apply.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import parallelism as par
+from repro.models import transformer as T
+from repro.serving.engine.paged_cache import BlockPool
+from repro.serving.engine.scheduler import DECODING, FINISHED, Request, Scheduler
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    block_size: int = 16
+    num_blocks: int = 128
+    max_blocks_per_seq: int = 16        # block-table width P
+    max_slots: int = 8                  # max concurrent sequences
+    prefill_chunk: int = 32             # prompt tokens per prefill call
+    prefills_per_step: int = 1          # chunks interleaved per engine step
+    attn_impl: str = "ref"              # "ref" | "kernel" (Pallas paged-decode)
+    interpret: Optional[bool] = None    # kernel interpret mode (None: off-TPU)
+
+
+def _build_step_fns(cfg, e: EngineConfig, plan):
+    """The two jitted device functions. Cached per (cfg, EngineConfig) for
+    the plan-less path so repeated Engine construction re-uses the compiled
+    steps (mirrors serve._cached_decode_step)."""
+
+    def in_plan(fn):
+        @functools.wraps(fn)
+        def wrapped(*a, **kw):
+            if plan is None:
+                return fn(*a, **kw)
+            with par.plan_context(plan):
+                return fn(*a, **kw)
+        return wrapped
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    @in_plan
+    def decode_fn(params, pool, tokens, tables, seq_lens, active):
+        positions = jnp.where(active, seq_lens, 0)
+        attn_lens = jnp.where(active, seq_lens + 1, 0)
+        logits, pool = T.paged_decode_step(
+            cfg, params, pool, {"token": tokens}, tables, positions,
+            attn_lens, impl=e.attn_impl, interpret=e.interpret)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, logits, seq_lens + active, pool
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    @in_plan
+    def prefill_fn(params, pool, tokens, table_row, start, valid):
+        logits, pool = T.paged_prefill_step(
+            cfg, params, pool, tokens, table_row, start, valid)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, logits, pool
+
+    return decode_fn, prefill_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_step_fns(cfg, e: EngineConfig):
+    return _build_step_fns(cfg, e, None)
+
+
+class Engine:
+    def __init__(self, cfg, params, engine_cfg: EngineConfig = None, plan=None):
+        self.cfg = cfg
+        self.ecfg = engine_cfg or EngineConfig()
+        self.plan = plan
+        if plan is not None:
+            params = jax.device_put(params, plan.param_shardings(params))
+        self.params = params
+        e = self.ecfg
+
+        self.pool_state = T.init_paged_state(cfg, e.num_blocks, e.block_size)
+        self.block_pool = BlockPool(e.num_blocks, e.block_size)
+        self.scheduler = Scheduler(
+            self.block_pool, max_slots=e.max_slots,
+            max_blocks_per_seq=e.max_blocks_per_seq,
+            prefill_chunk=e.prefill_chunk,
+            prefills_per_step=e.prefills_per_step)
+
+        # device-resident slot state (touched from the host only at request
+        # lifecycle events; the decode loop never reads it back)
+        self.tables = jnp.zeros((e.max_slots, e.max_blocks_per_seq), jnp.int32)
+        self.seq_lens = jnp.zeros((e.max_slots,), jnp.int32)
+        self.active = jnp.zeros((e.max_slots,), bool)
+        self.next_tok = jnp.zeros((e.max_slots,), jnp.int32)
+
+        self._next_rid = 0
+        self.requests: dict = {}        # rid -> Request (all ever submitted)
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
+                      "emitted": 0, "occupancy_sum": 0.0}
+
+        if plan is None:
+            self._decode, self._prefill = _cached_step_fns(cfg, self.ecfg)
+        else:
+            self._decode, self._prefill = _build_step_fns(cfg, self.ecfg, plan)
+
+    # ----------------------------------------------------------------- API
+    def add_request(self, prompt, max_new: int, *, temperature: float = 0.0,
+                    key=None, stop_token: Optional[int] = None) -> int:
+        """Queue a request; returns its id. `prompt`: 1-D int tokens."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] < 1:
+            raise ValueError("prompt must contain at least one token")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if temperature > 0.0 and key is None:
+            key = jax.random.PRNGKey(self._next_rid)
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(
+            rid=rid, prompt=prompt, max_new=max_new, temperature=temperature,
+            key=key, stop_token=stop_token)
+        self.requests[rid] = req
+        self.scheduler.submit(req)
+        return rid
+
+    def step(self) -> list:
+        """One engine iteration: admit -> prefill chunk(s) -> batched decode.
+        Returns the rids that emitted a token this step (token values are
+        materialized lazily — read them via `drain()` / `output()`)."""
+        e = self.ecfg
+        emitted = []
+
+        for req in self.scheduler.admit():
+            row = self.block_pool.table(req.rid)
+            padded = np.zeros((e.max_blocks_per_seq,), np.int32)
+            padded[:len(row)] = row
+            self.tables = self.tables.at[req.slot].set(jnp.asarray(padded))
+            self.seq_lens = self.seq_lens.at[req.slot].set(0)
+
+        for req, start, valid in self.scheduler.next_prefills():
+            chunk = np.zeros((1, e.prefill_chunk), np.int32)
+            chunk[0, :valid] = req.prompt[start:start + valid]
+            greedy, logits, self.pool_state = self._prefill(
+                self.params, self.pool_state, jnp.asarray(chunk),
+                self.tables[req.slot], jnp.int32(start), jnp.int32(valid))
+            req.prefilled += valid
+            self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
+            self.stats["prefill_chunks"] += 1
+            if req.prefilled == req.prompt_len:
+                # prompt complete: the last chunk's logits yield token #1
+                self._record_token(req, greedy, 0, logits, 0)
+                emitted.append(req.rid)
+                req.state = DECODING
+                self.active = self.active.at[req.slot].set(True)
+                if req.done:
+                    self._finish(req)
+
+        batch = self.scheduler.decode_batch()
+        if batch:
+            greedy, logits, self.seq_lens, self.pool_state = self._decode(
+                self.params, self.pool_state, self.next_tok, self.tables,
+                self.seq_lens, self.active)
+            self.next_tok = greedy
+            self.stats["decode_steps"] += 1
+            self.stats["occupancy_sum"] += len(batch) / e.max_slots
+            for req in batch:
+                self._record_token(req, greedy, req.slot, logits, req.slot)
+                emitted.append(req.rid)
+                if req.done:
+                    self._finish(req)
+
+        self.stats["emitted"] += len(emitted)
+        return emitted
+
+    def drain(self, max_steps: int = 100_000) -> dict:
+        """Run steps until every queued request finished; returns
+        {rid: np.ndarray of generated tokens} for ALL finished requests."""
+        steps = 0
+        while self.scheduler.has_work:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("drain did not converge")
+        memo = {}                       # one transfer per unique step vector
+        return {rid: self._materialize(r, memo)
+                for rid, r in self.requests.items() if r.state == FINISHED}
+
+    def output(self, rid) -> np.ndarray:
+        """Materialize a request's generated tokens (blocks on the device)."""
+        return self._materialize(self.requests[rid], {})
+
+    def _materialize(self, req: Request, memo: dict) -> np.ndarray:
+        out = []
+        for t in req.out_tokens:
+            if isinstance(t, tuple):                # (step vector, index)
+                vec, i = t
+                host = memo.get(id(vec))
+                if host is None:
+                    host = memo[id(vec)] = np.asarray(vec)
+                out.append(int(host[i]))
+            else:
+                out.append(int(t))
+        return np.asarray(out, np.int32)
+
+    def defragment(self) -> None:
+        """Compact used KV blocks to the front of the pool and rewrite every
+        live block table (host bookkeeping + one device gather per pool)."""
+        src = self.block_pool.defragment()
+        src_j = jnp.asarray(src)
+        self.pool_state = jax.tree.map(
+            lambda a: jnp.take(a, src_j, axis=1), self.pool_state)
+        tables = np.zeros(self.tables.shape, np.int32)
+        for req in self.scheduler.running.values():
+            row = self.block_pool.table(req.rid)
+            tables[req.slot, :len(row)] = row
+        self.tables = jnp.asarray(tables)
+
+    # ------------------------------------------------------------- internal
+    def _record_token(self, req: Request, greedy_vec, greedy_idx,
+                      logits, logits_idx):
+        """Record the request's next token. Greedy requests store a
+        (step-vector, index) ref — no host sync; temperature / stop_token
+        requests pay a host round-trip for the concrete value."""
+        if req.temperature > 0.0:
+            req.key, sub = jax.random.split(req.key)
+            tok = int(jax.random.categorical(
+                sub, logits[logits_idx] / req.temperature))
+            self.next_tok = self.next_tok.at[req.slot].set(tok)
+            req.out_tokens.append(tok)
+            return
+        if req.stop_token is not None:
+            tok = int(greedy_vec[greedy_idx])
+            req.out_tokens.append(tok)
+        else:
+            req.out_tokens.append((greedy_vec, greedy_idx))
+        if req.state != DECODING:
+            # token came from prefill logits: seed the device next-token
+            # vector for the upcoming decode step
+            self.next_tok = self.next_tok.at[req.slot].set(
+                greedy_vec[greedy_idx])
+
+    def _finish(self, req: Request) -> None:
+        self.active = self.active.at[req.slot].set(False)
+        self.scheduler.finish(req)

@@ -1,0 +1,92 @@
+"""Paged KV cache bookkeeping: a fixed pool of fixed-size blocks plus a
+per-sequence block table (vLLM-style PagedAttention memory management).
+
+`BlockPool` is pure host-side accounting — the device-side pool tensors live
+in the Engine (`models.transformer.init_paged_state`). Allocation is O(1)
+free-list pop; every block is owned by at most one sequence; `defragment`
+computes a compaction permutation the Engine applies to the device pools so
+long-running servers keep used blocks dense at the front of the pool.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class BlockPoolError(RuntimeError):
+    """Invariant violation: double free, unknown owner, over-allocation."""
+
+
+@dataclass
+class BlockPool:
+    num_blocks: int
+    block_size: int
+    _free: list = field(init=False)
+    _owned: dict = field(init=False)      # rid -> ordered list of block ids
+
+    def __post_init__(self):
+        self._free = list(range(self.num_blocks - 1, -1, -1))  # LIFO
+        self._owned = {}
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - self.num_free / self.num_blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_alloc(self, n_blocks: int) -> bool:
+        return n_blocks <= self.num_free
+
+    def table(self, rid) -> list:
+        """Ordered block ids of a sequence (logical page i -> physical id)."""
+        if rid not in self._owned:
+            raise BlockPoolError(f"unknown sequence {rid!r}")
+        return list(self._owned[rid])
+
+    # ----------------------------------------------------------- mutation
+    def alloc(self, rid, n_blocks: int) -> list:
+        """Append `n_blocks` fresh blocks to sequence `rid` (creating it)."""
+        if n_blocks > self.num_free:
+            raise BlockPoolError(
+                f"need {n_blocks} blocks, only {self.num_free} free")
+        got = [self._free.pop() for _ in range(n_blocks)]
+        self._owned.setdefault(rid, []).extend(got)
+        return got
+
+    def free_seq(self, rid) -> int:
+        """Release every block of a sequence. Double-free raises."""
+        if rid not in self._owned:
+            raise BlockPoolError(f"double free / unknown sequence {rid!r}")
+        blocks = self._owned.pop(rid)
+        self._free.extend(reversed(blocks))
+        return len(blocks)
+
+    def defragment(self) -> np.ndarray:
+        """Compact used blocks to the front of the pool.
+
+        Returns `src` (num_blocks,) int32 such that the device pools must be
+        permuted as ``new_pool[i] = old_pool[src[i]]``; owner tables are
+        rewritten in place to the new dense ids."""
+        src = np.empty(self.num_blocks, np.int32)
+        nxt = 0
+        for rid in self._owned:
+            new_ids = []
+            for old in self._owned[rid]:
+                src[nxt] = old
+                new_ids.append(nxt)
+                nxt += 1
+            self._owned[rid] = new_ids
+        n_used = nxt
+        leftover = sorted(self._free)
+        for old in leftover:
+            src[nxt] = old
+            nxt += 1
+        self._free = list(range(self.num_blocks - 1, n_used - 1, -1))
+        return src

@@ -1,0 +1,125 @@
+"""Continuous-batching scheduler: request queue, block-budget admission,
+chunked prefill interleaved with decode.
+
+Policy (one engine `step()`):
+  1. ADMIT  — pop waiting requests while a slot AND their full block
+              reservation (prompt + max_new tokens, conservative: no
+              preemption needed) are available.
+  2. PREFILL — run up to `prefills_per_step` prompt chunks of admitted
+              requests (chunk = `prefill_chunk` tokens), so long prompts
+              never block the decode batch for more than one chunk.
+  3. DECODE — one batched token step over every DECODING slot.
+
+Requests are pure host-side state; all device work goes through the Engine's
+jitted functions.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.engine.paged_cache import BlockPool, BlockPoolError
+
+WAITING, PREFILLING, DECODING, FINISHED = "waiting", "prefilling", "decoding", "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S0,) int32
+    max_new: int
+    temperature: float = 0.0
+    key: Optional[object] = None        # PRNG key when temperature > 0
+    stop_token: Optional[int] = None
+    state: str = WAITING
+    slot: int = -1
+    prefilled: int = 0                  # prompt tokens already in the pool
+    out_tokens: list = field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        if len(self.out_tokens) >= self.max_new:
+            return True
+        return (self.stop_token is not None and self.out_tokens
+                and self.out_tokens[-1] == self.stop_token)
+
+
+class Scheduler:
+    def __init__(self, pool: BlockPool, *, max_slots: int,
+                 max_blocks_per_seq: int, prefill_chunk: int,
+                 prefills_per_step: int = 1):
+        self.pool = pool
+        self.max_slots = max_slots
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.prefill_chunk = prefill_chunk
+        self.prefills_per_step = prefills_per_step
+        self.waiting: deque = deque()
+        self.running: dict = {}         # rid -> Request (PREFILLING|DECODING)
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        need = self.pool.blocks_for(req.prompt_len + req.max_new)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"request {req.rid}: needs {need} blocks > table width "
+                f"{self.max_blocks_per_seq}; raise max_blocks_per_seq/block_size")
+        if need > self.pool.num_blocks:
+            raise ValueError(f"request {req.rid}: larger than the whole pool")
+        self.waiting.append(req)
+
+    def admit(self) -> list:
+        """Admission by free-block budget: reserve blocks for the whole
+        sequence (prompt + max_new) up front — with no preemption this
+        guarantees an admitted request always runs to completion."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            need = self.pool.blocks_for(req.prompt_len + req.max_new)
+            if not self.pool.can_alloc(need):
+                break                   # FCFS: don't starve the head
+            self.waiting.popleft()
+            self.pool.alloc(req.rid, need)
+            req.slot = self._free_slots.pop()
+            req.state = PREFILLING
+            self.running[req.rid] = req
+            admitted.append(req)
+        return admitted
+
+    def next_prefills(self) -> list:
+        """(request, start, valid_len) chunks to prefill this step."""
+        work = []
+        for req in self.running.values():
+            if len(work) >= self.prefills_per_step:
+                break
+            if req.state == PREFILLING:
+                start = req.prefilled
+                valid = min(self.prefill_chunk, req.prompt_len - start)
+                work.append((req, start, valid))
+        return work
+
+    def decode_batch(self) -> list:
+        return [r for r in self.running.values() if r.state == DECODING]
+
+    def finish(self, req: Request) -> None:
+        req.state = FINISHED
+        self.pool.free_seq(req.rid)
+        self._free_slots.append(req.slot)
+        del self.running[req.rid]
+        req.slot = -1
+
+    # --------------------------------------------------------------- status
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def occupancy(self) -> float:
+        """Fraction of decode slots doing useful work right now."""
+        return len(self.running) / self.max_slots

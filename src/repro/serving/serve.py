@@ -6,6 +6,8 @@ shapes (decode_32k, long_500k): ONE new token against a cache of seq_len.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -49,6 +51,18 @@ class _null:
         return False
 
 
+# jitted-step caches keyed by the (hashable, frozen) ModelConfig so repeated
+# generate() calls don't re-trace
+@functools.lru_cache(maxsize=None)
+def _cached_decode_step(cfg):
+    return jax.jit(lambda p, c, tok, i: T.decode_step(cfg, p, c, {"token": tok}, i))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_prefill_step(cfg):
+    return jax.jit(lambda p, c, toks: T.prefill_step(cfg, p, c, {"tokens": toks}))
+
+
 def sample(logits, key, temperature=1.0):
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -56,19 +70,29 @@ def sample(logits, key, temperature=1.0):
 
 
 def generate(cfg, params, prompt_tokens, max_new, *, key=None, temperature=0.0,
-             max_len=None):
-    """Greedy/temperature generation for token-input models (examples only;
-    runs the decode step sequentially, prefill included)."""
+             max_len=None, prefill_mode="auto"):
+    """Greedy/temperature generation for token-input models.
+
+    Prefill fills the whole prompt cache in ONE jitted call (`prefill_step`)
+    instead of S0 sequential decode steps; `prefill_mode="loop"` keeps the
+    old token-by-token path as a reference oracle ("auto" falls back to it
+    for recurrent families without a batched prefill)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     B, S0 = prompt_tokens.shape
     max_len = max_len or (S0 + max_new)
     cache = T.init_decode_state(cfg, B, max_len)
-    step = jax.jit(lambda p, c, tok, i: T.decode_step(cfg, p, c, {"token": tok}, i))
+    step = _cached_decode_step(cfg)
 
-    tok = prompt_tokens[:, 0]
-    logits = None
-    for i in range(S0):  # prefill token-by-token (simple and correct)
-        logits, cache = step(params, cache, prompt_tokens[:, i], jnp.int32(i))
+    if prefill_mode not in ("auto", "batched", "loop"):
+        raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+    if prefill_mode == "auto":
+        prefill_mode = "batched" if T.supports_batched_prefill(cfg) else "loop"
+    if prefill_mode == "batched":
+        logits, cache = _cached_prefill_step(cfg)(params, cache, prompt_tokens)
+    else:  # reference path: token-by-token (any family)
+        logits = None
+        for i in range(S0):
+            logits, cache = step(params, cache, prompt_tokens[:, i], jnp.int32(i))
     out = []
     for j in range(max_new):
         key, sub = jax.random.split(key)

@@ -2,6 +2,7 @@
 import math
 
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import costmodel as cm

@@ -13,8 +13,7 @@ class TestExpertParallel:
             from repro.configs.base import ModelConfig
             from repro.core import parallelism as par
             from repro.models import moe as M
-            mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = jax.make_mesh((2, 2), ('data', 'model'))
             plan = par.make_plan('dp_tp', mesh)
             cfg = ModelConfig(name='t', family='moe', d_model=32, num_heads=2,
                               num_kv_heads=2, d_ff=64, vocab_size=17,
@@ -40,8 +39,7 @@ class TestExpertParallel:
             from repro.core import parallelism as par
             from repro.optim import make_optimizer
             from repro.train import trainer
-            mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = jax.make_mesh((2, 2), ('data', 'model'))
             plan = par.make_plan('dp_tp', mesh)
             cfg = ModelConfig(name='t', family='moe', num_layers=2, d_model=32,
                               num_heads=2, num_kv_heads=2, head_dim=16,

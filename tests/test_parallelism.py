@@ -9,12 +9,19 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro.core import parallelism as par
 
 
+def _abstract_mesh(shape, axes):
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:   # older jax: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def mesh_single():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_multi():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class Leaf:

@@ -1,0 +1,233 @@
+"""Continuous-batching engine: block-pool invariants, chunked prefill,
+end-to-end equality with the legacy serving path, defrag, and the Pallas
+kernel route. All CPU (`-m serving` smoke subset; interpret-mode Pallas)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serving import serve
+from repro.serving.engine import BlockPool, BlockPoolError, Engine, EngineConfig
+
+pytestmark = pytest.mark.serving
+
+
+# ------------------------------------------------------------------ BlockPool
+class TestBlockPool:
+    def test_alloc_free_roundtrip(self):
+        p = BlockPool(8, 4)
+        got = p.alloc("a", 3)
+        assert len(got) == len(set(got)) == 3 and p.num_free == 5
+        p.alloc("b", 5)
+        assert p.num_free == 0 and p.utilization == 1.0
+        assert not p.can_alloc(1)
+        p.free_seq("a")
+        assert p.num_free == 3
+        p.free_seq("b")
+        assert p.num_free == 8
+
+    def test_double_free_raises(self):
+        p = BlockPool(4, 4)
+        p.alloc("a", 2)
+        p.free_seq("a")
+        with pytest.raises(BlockPoolError):
+            p.free_seq("a")
+
+    def test_over_alloc_raises(self):
+        p = BlockPool(4, 4)
+        with pytest.raises(BlockPoolError):
+            p.alloc("a", 5)
+
+    def test_no_block_owned_twice(self):
+        p = BlockPool(16, 4)
+        owned = p.alloc("a", 5) + p.alloc("b", 7) + p.alloc("a", 4)
+        assert len(owned) == len(set(owned)) == 16
+
+    def test_blocks_for(self):
+        p = BlockPool(8, 4)
+        assert [p.blocks_for(n) for n in (1, 4, 5, 8, 9)] == [1, 1, 2, 2, 3]
+
+    def test_defragment_compacts_and_preserves_ownership(self):
+        p = BlockPool(10, 4)
+        p.alloc("a", 3)
+        p.alloc("b", 3)
+        p.free_seq("a")                        # holes at the front
+        before = p.table("b")
+        src = p.defragment()
+        after = p.table("b")
+        assert after == [0, 1, 2]              # compacted to the front
+        # permutation maps old contents to new slots: new[i] = old[src[i]]
+        assert [int(src[i]) for i in after] == before
+        assert sorted(src.tolist()) == list(range(10))
+        assert p.num_free == 7
+        p.alloc("c", 7)                        # free list is consistent
+        assert p.num_free == 0
+
+
+# ------------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def cfg():
+    return ModelConfig(name="eng-t", family="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=50, loss_chunk=16, attn_chunk=16,
+                       remat=False, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **kw):
+    base = dict(block_size=4, num_blocks=64, max_blocks_per_seq=8,
+                max_slots=4, prefill_chunk=8)
+    base.update(kw)
+    return Engine(cfg, params, EngineConfig(**base))
+
+
+MIXED_LENS = (3, 7, 12, 5, 20, 9, 4, 15)
+MIXED_NEWS = (4, 6, 3, 8, 5, 7, 2, 6)
+
+
+def _mixed_requests(vocab=50, seed=42):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=L).astype(np.int32)
+            for L in MIXED_LENS], list(MIXED_NEWS)
+
+
+# ------------------------------------------------------------------ end-to-end
+class TestEngineE2E:
+    def test_mixed_lengths_staggered_bit_identical_to_serve(self, cfg, params):
+        """Acceptance: N=8 staggered mixed-length requests through step()
+        produce greedy outputs bit-identical to serve.generate."""
+        prompts, news = _mixed_requests()
+        eng = _engine(cfg, params)
+        rids = []
+        for p, mn in zip(prompts, news):
+            rids.append(eng.add_request(p, mn))
+            eng.step()                          # staggered arrivals
+        outs = eng.drain()
+        assert len(outs) == len(prompts)
+        for rid, p, mn in zip(rids, prompts, news):
+            ref = np.asarray(serve.generate(
+                cfg, params, jnp.asarray(p)[None], max_new=mn,
+                temperature=0.0))[0]
+            np.testing.assert_array_equal(outs[rid], ref)
+
+    def test_no_block_leak_after_drain(self, cfg, params):
+        prompts, news = _mixed_requests(seed=1)
+        eng = _engine(cfg, params)
+        for p, mn in zip(prompts, news):
+            eng.add_request(p, mn)
+        eng.drain()
+        assert eng.block_pool.num_free == eng.ecfg.num_blocks
+        assert not eng.scheduler.running and not eng.scheduler.waiting
+
+    def test_chunked_prefill_long_prompt(self, cfg, params):
+        """Prompt much longer than prefill_chunk prefills over several steps
+        and still matches the reference."""
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, 50, size=21).astype(np.int32)
+        eng = _engine(cfg, params, prefill_chunk=4)
+        rid = eng.add_request(prompt, 5)
+        outs = eng.drain()
+        assert eng.stats["prefill_chunks"] == 6   # ceil(21/4)
+        ref = np.asarray(serve.generate(
+            cfg, params, jnp.asarray(prompt)[None], max_new=5,
+            temperature=0.0))[0]
+        np.testing.assert_array_equal(outs[rid], ref)
+
+    def test_kernel_impl_matches_ref_impl(self, cfg, params):
+        prompts, news = _mixed_requests(seed=5)
+        outs = {}
+        for impl in ("ref", "kernel"):
+            eng = _engine(cfg, params, attn_impl=impl, max_slots=2)
+            rids = [eng.add_request(p, mn)
+                    for p, mn in zip(prompts[:3], news[:3])]
+            res = eng.drain()
+            outs[impl] = [res[r] for r in rids]
+        for a, b in zip(outs["ref"], outs["kernel"]):
+            np.testing.assert_array_equal(a, b)
+
+    def test_defragment_mid_flight_preserves_outputs(self, cfg, params):
+        prompts, news = _mixed_requests(seed=7)
+        eng = _engine(cfg, params)
+        rids = [eng.add_request(p, mn) for p, mn in zip(prompts, news)]
+        for _ in range(4):
+            eng.step()
+        eng.defragment()                        # live sequences get remapped
+        for _ in range(3):
+            eng.step()
+        eng.defragment()
+        outs = eng.drain()
+        for rid, p, mn in zip(rids, prompts, news):
+            ref = np.asarray(serve.generate(
+                cfg, params, jnp.asarray(p)[None], max_new=mn,
+                temperature=0.0))[0]
+            np.testing.assert_array_equal(outs[rid], ref)
+
+    def test_admission_respects_block_budget(self, cfg, params):
+        """Pool with room for ~1 sequence: requests are served one at a time
+        but all complete."""
+        prompts, news = _mixed_requests(seed=9)
+        eng = _engine(cfg, params, num_blocks=8, max_slots=4)
+        rids = [eng.add_request(p, mn) for p, mn in zip(prompts[:4], news[:4])]
+        outs = eng.drain()
+        assert sorted(outs) == sorted(rids)
+        assert eng.block_pool.num_free == 8
+
+    def test_stop_token_and_temperature_paths(self, cfg, params):
+        prompts, _ = _mixed_requests(seed=11)
+        eng = _engine(cfg, params)
+        r1 = eng.add_request(prompts[0], 5, temperature=1.0,
+                             key=jax.random.PRNGKey(0))
+        r2 = eng.add_request(prompts[1], 20, stop_token=7)
+        outs = eng.drain()
+        assert outs[r1].shape == (5,)
+        assert bool(np.all(outs[r1] >= 0)) and bool(np.all(outs[r1] < 50))
+        assert outs[r2][-1] == 7 or outs[r2].shape == (20,)
+
+    def test_oversized_request_rejected(self, cfg, params):
+        eng = _engine(cfg, params)
+        with pytest.raises(ValueError):
+            eng.add_request(np.zeros(100, np.int32), 10)   # > table width
+
+
+# --------------------------------------------------------------- serve prefill
+class TestBatchedPrefill:
+    def test_batched_equals_loop_dense(self, cfg, params):
+        prompt = jnp.asarray([[1, 2, 3, 4, 7, 9, 11], [5, 6, 7, 8, 2, 3, 4]],
+                             jnp.int32)
+        a = serve.generate(cfg, params, prompt, max_new=6, temperature=0.0,
+                           prefill_mode="batched")
+        b = serve.generate(cfg, params, prompt, max_new=6, temperature=0.0,
+                           prefill_mode="loop")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batched_equals_loop_sliding_window(self):
+        cfg = ModelConfig(name="eng-s", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                          d_ff=128, vocab_size=50, loss_chunk=16,
+                          attn_chunk=16, remat=False, dtype="float32",
+                          attention_type="sliding", window_size=4)
+        params = T.init_params(cfg, jax.random.PRNGKey(1))
+        prompt = jnp.asarray([[1, 2, 3, 4, 7, 9, 11, 13, 2, 5]], jnp.int32)
+        a = serve.generate(cfg, params, prompt, max_new=5, temperature=0.0,
+                           prefill_mode="batched")
+        b = serve.generate(cfg, params, prompt, max_new=5, temperature=0.0,
+                           prefill_mode="loop")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_auto_falls_back_for_recurrent_families(self):
+        cfg = ModelConfig(name="eng-r", family="ssm", ssm_type="rwkv6",
+                          num_layers=2, d_model=64, num_heads=2,
+                          num_kv_heads=2, head_dim=32, d_ff=128,
+                          vocab_size=50, loss_chunk=16, attn_chunk=16,
+                          remat=False, ssm_head_dim=32, dtype="float32")
+        assert not T.supports_batched_prefill(cfg)
+        params = T.init_params(cfg, jax.random.PRNGKey(2))
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        out = serve.generate(cfg, params, prompt, max_new=3, temperature=0.0)
+        assert out.shape == (1, 3)
