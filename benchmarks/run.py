@@ -1,5 +1,9 @@
 """Benchmark harness (deliverable (d)): one module per paper table/figure.
-Prints `name,us_per_call,derived` CSV rows."""
+Prints `name,us_per_call,derived` CSV rows.
+
+`--serving-workload mixed|shared|both` is passed through to
+benchmarks.serving_bench (shared = the prefix-caching comparison)."""
+import argparse
 import sys
 import traceback
 
@@ -20,13 +24,19 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serving-workload", choices=("mixed", "shared", "both"),
+                    default="both", help="workload(s) for serving_bench")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
     for mod_name in MODULES:
+        kwargs = ({"workload": args.serving_workload}
+                  if mod_name == "benchmarks.serving_bench" else {})
         try:
             mod = __import__(mod_name, fromlist=["main"])
-            mod.main()
+            mod.main(**kwargs)
         except Exception:
             failures += 1
             print(f"{mod_name},ERROR,", flush=True)

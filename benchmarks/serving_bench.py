@@ -1,9 +1,10 @@
-"""Serving throughput: continuous-batching engine vs legacy static batch.
+"""Serving throughput: continuous-batching engine vs legacy static batch,
+plus prefix caching on a shared-prefix workload.
 
-Chat-shaped mixed-length workload (short prompts, skewed generation budgets,
-3x more requests than decode slots) — the regime where static batching
-collapses: every batch pads to its longest prompt AND decodes for its
-longest budget while finished rows burn compute.
+Workload `mixed` — chat-shaped mixed lengths (short prompts, skewed
+generation budgets, 3x more requests than decode slots) — the regime where
+static batching collapses: every batch pads to its longest prompt AND
+decodes for its longest budget while finished rows burn compute.
 
   * legacy — successive `serve.generate` calls over static batches of
     max_slots requests (FCFS, left-padded, max_new = batch max). This is the
@@ -12,10 +13,19 @@ longest budget while finished rows burn compute.
   * engine — the same requests through `Engine.step()` with chunked prefill
     and continuous batching.
 
-Rows: tokens/s for both, engine decode-batch occupancy, and p50/p99
-per-token latency (wall time of the engine step that emitted each token,
-measured in a separate synced pass so async dispatch can't hide compute).
+Workload `shared` — every request repeats a common system-prompt prefix
+(chat template / few-shot header) plus a short unique suffix. The engine is
+run with prefix caching ON vs OFF (cache primed by one untimed request in
+both modes so the comparison is steady-state); rows report cache hit rate,
+prefill tokens saved, and the on/off speedup.
+
+Rows: tokens/s, engine decode-batch occupancy, p50/p99 per-token latency
+(wall time of the engine step that emitted each token, measured in a
+separate synced pass so async dispatch can't hide compute), and the prefix-
+cache metrics. `main(workload=...)` accepts "mixed" | "shared" | "both";
+`benchmarks/run.py --serving-workload` passes it through.
 """
+import argparse
 import time
 
 import jax
@@ -48,36 +58,60 @@ def _workload(n=24, seed=0):
 MAX_SLOTS = 8
 
 
-def _fresh_engine(cfg, params, prompts):
+def _workload_shared(n=24, seed=0, prefix_len=96):
+    """Shared-prefix traffic: one common system prompt + short unique
+    suffixes, short generations (prefill-dominated — the prefix-cache
+    sweet spot)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, 256, size=prefix_len).astype(np.int32)
+    prompts, news = [], []
+    for _ in range(n):
+        tail = rng.integers(0, 256,
+                            size=int(rng.integers(4, 17))).astype(np.int32)
+        prompts.append(np.concatenate([prefix, tail]))
+        news.append(int(rng.integers(8, 17)))
+    return prompts, news, prefix
+
+
+def _fresh_engine(cfg, params, prompts, *, prefix_caching=True, prime=None):
     eng = Engine(cfg, params, EngineConfig(
         block_size=16, num_blocks=256, max_blocks_per_seq=8,
-        max_slots=MAX_SLOTS, prefill_chunk=32, prefills_per_step=4))
+        max_slots=MAX_SLOTS, prefill_chunk=32, prefills_per_step=4,
+        prefix_caching=prefix_caching))
     # warmup: compile prefill/decode once on a throwaway request
-    warm_rid = eng.add_request(prompts[0][:4], 2)
+    skip = {eng.add_request(prompts[0][:4], 2)}
     eng.drain()
-    return eng, warm_rid
+    if prime is not None:
+        # populate the prefix index (no-op with caching off; run in both
+        # modes so the timed region does identical request work)
+        skip.add(eng.add_request(prime, 1))
+        eng.drain()
+    return eng, skip
 
 
-def _run_engine(cfg, params, prompts, max_news):
-    """Throughput pass: free-running steps, one sync at the end. Warmup
-    tokens/steps are excluded from every reported number."""
-    eng, warm_rid = _fresh_engine(cfg, params, prompts)
+def _run_engine(cfg, params, prompts, max_news, *, prefix_caching=True,
+                prime=None):
+    """Throughput pass: free-running steps, one sync at the end. Warmup and
+    cache-priming tokens/steps are excluded from every reported number."""
+    eng, skip = _fresh_engine(cfg, params, prompts,
+                              prefix_caching=prefix_caching, prime=prime)
     warm = dict(eng.stats)
     for p, mn in zip(prompts, max_news):
         eng.add_request(p, mn)
     t0 = time.perf_counter()
     outs = eng.drain()                             # materializes every token
     wall = time.perf_counter() - t0
-    total = sum(o.shape[0] for rid, o in outs.items() if rid != warm_rid)
+    total = sum(o.shape[0] for rid, o in outs.items() if rid not in skip)
     occ = ((eng.stats["occupancy_sum"] - warm["occupancy_sum"])
            / max(eng.stats["decode_steps"] - warm["decode_steps"], 1))
-    return total, wall, occ
+    hits = eng.stats["prefix_hit_tokens"] - warm["prefix_hit_tokens"]
+    return total, wall, occ, hits
 
 
 def _run_engine_latency(cfg, params, prompts, max_news):
     """Latency pass: block on each step's emitted tokens so per-step wall
     time reflects device completion, not async dispatch."""
-    eng, _ = _fresh_engine(cfg, params, prompts)
+    eng, _skip = _fresh_engine(cfg, params, prompts)
     for p, mn in zip(prompts, max_news):
         eng.add_request(p, mn)
     lat = []
@@ -135,12 +169,10 @@ def _run_legacy_loop(cfg, params, prompts, max_news):
     return useful, wall
 
 
-def main():
-    cfg = _cfg()
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
+def _main_mixed(cfg, params):
     prompts, max_news = _workload()
 
-    total, wall, occ = _run_engine(cfg, params, prompts, max_news)
+    total, wall, occ, _hits = _run_engine(cfg, params, prompts, max_news)
     tps_engine = total / wall
     useful, wall_legacy = _run_legacy(cfg, params, prompts, max_news)
     tps_legacy = useful / wall_legacy
@@ -161,5 +193,40 @@ def main():
     emit("serving_speedup_vs_legacy_loop", None, f"{tps_engine / tps_loop:.2f}x")
 
 
+def _main_shared(cfg, params):
+    prompts, max_news, prefix = _workload_shared()
+    prompt_tokens = sum(p.shape[0] for p in prompts)
+
+    total_c, wall_c, _occ, hits = _run_engine(
+        cfg, params, prompts, max_news, prefix_caching=True, prime=prefix)
+    total_n, wall_n, _occ, _h = _run_engine(
+        cfg, params, prompts, max_news, prefix_caching=False, prime=prefix)
+    tps_cache, tps_nocache = total_c / wall_c, total_n / wall_n
+
+    emit("serving_prefix_cache_tokens_per_s", wall_c / total_c * 1e6,
+         f"{tps_cache:.1f}")
+    emit("serving_prefix_nocache_tokens_per_s", wall_n / total_n * 1e6,
+         f"{tps_nocache:.1f}")
+    emit("serving_prefix_cache_hit_rate", None,
+         f"{hits / prompt_tokens:.3f}")
+    emit("serving_prefill_tokens_saved", None, str(int(hits)))
+    emit("serving_prefix_cache_speedup", None,
+         f"{tps_cache / tps_nocache:.2f}x")
+
+
+def main(workload: str = "both"):
+    if workload not in ("mixed", "shared", "both"):
+        raise ValueError(f"unknown workload {workload!r}")
+    cfg = _cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    if workload in ("mixed", "both"):
+        _main_mixed(cfg, params)
+    if workload in ("shared", "both"):
+        _main_shared(cfg, params)
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("mixed", "shared", "both"),
+                    default="both")
+    main(ap.parse_args().workload)

@@ -1,6 +1,7 @@
 from repro.serving.engine.engine import Engine, EngineConfig
-from repro.serving.engine.paged_cache import BlockPool, BlockPoolError
+from repro.serving.engine.paged_cache import (BlockPool, BlockPoolError,
+                                              prefix_hashes)
 from repro.serving.engine.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "EngineConfig", "BlockPool", "BlockPoolError",
-           "Request", "Scheduler"]
+           "Request", "Scheduler", "prefix_hashes"]

@@ -18,13 +18,24 @@ pipeline. Host↔device traffic happens only at request lifecycle events
 decisions (temperature sampling, stop_token scanning). Generated tokens are
 recorded as whole per-step vectors and materialized once at drain.
 
-Greedy outputs are bit-identical to ``serve.generate``. A ``ShardingPlan``
-may be passed for multi-device serving: params are placed by the plan's
-rules and all device steps run under the plan context so activation
-constraints apply.
+Prefix caching (``EngineConfig.prefix_caching``, on by default): fully
+prefilled prompt blocks are published to the pool's prefix index under
+chained token hashes; a new request's longest cached block-aligned prefix is
+aliased read-only into its table at admission and only the uncached tail is
+prefilled. Because a block's KV content is a deterministic function of the
+token prefix it covers, aliased blocks are bitwise identical to what the
+request would have recomputed — greedy outputs stay bit-identical to
+``serve.generate`` with caching on or off. A fully-cached prompt triggers
+one copy-on-write block duplication (``copy_block_fn``) so the final prompt
+token can be re-run privately for its logits.
+
+A ``ShardingPlan`` may be passed for multi-device serving: params are placed
+by the plan's rules and all device steps run under the plan context so
+activation constraints apply.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Optional
@@ -47,6 +58,7 @@ class EngineConfig:
     max_slots: int = 8                  # max concurrent sequences
     prefill_chunk: int = 32             # prompt tokens per prefill call
     prefills_per_step: int = 1          # chunks interleaved per engine step
+    prefix_caching: bool = True         # alias cached prompt-prefix blocks
     attn_impl: str = "ref"              # "ref" | "kernel" (Pallas paged-decode)
     interpret: Optional[bool] = None    # kernel interpret mode (None: off-TPU)
 
@@ -84,7 +96,20 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, logits, pool
 
-    return decode_fn, prefill_fn
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def copy_block_fn(pool, src, dst):
+        # copy-on-write: duplicate one KV block (all layers) so a request
+        # whose prompt is fully cached can re-run its last token privately
+        return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
+
+    return decode_fn, prefill_fn, copy_block_fn
+
+
+def _step_fn_key(e: EngineConfig) -> EngineConfig:
+    """Host-only fields (scheduler policy, prefix caching) are never read by
+    the traced functions — normalize them out of the compile-cache key so
+    toggling them reuses the compiled steps."""
+    return dataclasses.replace(e, prefix_caching=True, prefills_per_step=1)
 
 
 @functools.lru_cache(maxsize=None)
@@ -108,7 +133,8 @@ class Engine:
             self.block_pool, max_slots=e.max_slots,
             max_blocks_per_seq=e.max_blocks_per_seq,
             prefill_chunk=e.prefill_chunk,
-            prefills_per_step=e.prefills_per_step)
+            prefills_per_step=e.prefills_per_step,
+            prefix_caching=e.prefix_caching)
 
         # device-resident slot state (touched from the host only at request
         # lifecycle events; the decode loop never reads it back)
@@ -120,12 +146,15 @@ class Engine:
         self._next_rid = 0
         self.requests: dict = {}        # rid -> Request (all ever submitted)
         self.stats = {"decode_steps": 0, "prefill_chunks": 0,
-                      "emitted": 0, "occupancy_sum": 0.0}
+                      "emitted": 0, "occupancy_sum": 0.0,
+                      "prefix_hit_tokens": 0, "cow_copies": 0}
 
         if plan is None:
-            self._decode, self._prefill = _cached_step_fns(cfg, self.ecfg)
+            self._decode, self._prefill, self._copy_block = \
+                _cached_step_fns(cfg, _step_fn_key(self.ecfg))
         else:
-            self._decode, self._prefill = _build_step_fns(cfg, self.ecfg, plan)
+            self._decode, self._prefill, self._copy_block = \
+                _build_step_fns(cfg, self.ecfg, plan)
 
     # ----------------------------------------------------------------- API
     def add_request(self, prompt, max_new: int, *, temperature: float = 0.0,
@@ -159,7 +188,16 @@ class Engine:
             padded = np.zeros((e.max_blocks_per_seq,), np.int32)
             padded[:len(row)] = row
             self.tables = self.tables.at[req.slot].set(jnp.asarray(padded))
-            self.seq_lens = self.seq_lens.at[req.slot].set(0)
+            self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
+            self.stats["prefix_hit_tokens"] += req.prefilled
+            if req.cow_src is not None:
+                # whole prompt cached: copy the last matched block into the
+                # private block at its table position, then re-prefill only
+                # the final prompt token there (yields the first-token logits)
+                dst = row[req.prompt_len // e.block_size - 1]
+                self.pool_state = self._copy_block(
+                    self.pool_state, jnp.int32(req.cow_src), jnp.int32(dst))
+                self.stats["cow_copies"] += 1
 
         for req, start, valid in self.scheduler.next_prefills():
             chunk = np.zeros((1, e.prefill_chunk), np.int32)
@@ -168,6 +206,7 @@ class Engine:
                 self.params, self.pool_state, jnp.asarray(chunk),
                 self.tables[req.slot], jnp.int32(start), jnp.int32(valid))
             req.prefilled += valid
+            self.scheduler.register_prefilled(req)
             self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
             self.stats["prefill_chunks"] += 1
             if req.prefilled == req.prompt_len:
@@ -226,9 +265,12 @@ class Engine:
                 out.append(int(t))
         return np.asarray(out, np.int32)
 
-    def defragment(self) -> None:
+    def defragment(self) -> np.ndarray:
         """Compact used KV blocks to the front of the pool and rewrite every
-        live block table (host bookkeeping + one device gather per pool)."""
+        live block table (host bookkeeping + one device gather per pool).
+        Shared (prefix-cached) blocks move once and every owner's table
+        follows; cached-free blocks keep their content. Returns the applied
+        permutation `src` (``new_pool[i] = old_pool[src[i]]``)."""
         src = self.block_pool.defragment()
         src_j = jnp.asarray(src)
         self.pool_state = jax.tree.map(
@@ -238,6 +280,7 @@ class Engine:
             row = self.block_pool.table(req.rid)
             tables[req.slot, :len(row)] = row
         self.tables = jnp.asarray(tables)
+        return src
 
     # ------------------------------------------------------------- internal
     def _record_token(self, req: Request, greedy_vec, greedy_idx,

@@ -1,14 +1,37 @@
-"""Paged KV cache bookkeeping: a fixed pool of fixed-size blocks plus a
-per-sequence block table (vLLM-style PagedAttention memory management).
+"""Paged KV cache bookkeeping: a fixed pool of fixed-size blocks, per-sequence
+block tables, per-block refcounts, and a prefix index for cross-request KV
+reuse (vLLM-style PagedAttention memory management with prefix caching).
 
 `BlockPool` is pure host-side accounting — the device-side pool tensors live
-in the Engine (`models.transformer.init_paged_state`). Allocation is O(1)
-free-list pop; every block is owned by at most one sequence; `defragment`
-computes a compaction permutation the Engine applies to the device pools so
-long-running servers keep used blocks dense at the front of the pool.
+in the Engine (`models.transformer.init_paged_state`). A block may be
+referenced by any number of sequence tables (shared read-only prompt
+prefixes); the refcount tracks exactly how many. Blocks whose refcount drops
+to zero but that are registered in the prefix index are NOT lost: they go on
+the free list in least-recently-used order with their device content intact,
+so a later request with the same prompt prefix can revive them via
+`match_prefix` + `share` — and allocation pressure reclaims them LRU-first
+(eviction = popping a registered block off the free list). With an empty
+index the pool degrades exactly to the PR 1 allocator.
+
+Free-list discipline (one deque encodes both the reuse preference and the
+eviction order):
+
+    appendleft: cached blocks          append/pop (right): plain blocks
+    [newest cached ... oldest cached | never used | recently freed plain]
+                                                        ^ alloc pops here
+
+Plain (unregistered) frees are reused first; registered blocks are only
+reclaimed once no plain block remains, oldest-freed first (LRU).
+
+`defragment` computes a compaction permutation the Engine applies to the
+device pools; it rewrites every owner's table consistently under aliasing
+(a shared block moves once, every table follows) and preserves the content
+and LRU order of cached-free blocks.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -18,21 +41,50 @@ class BlockPoolError(RuntimeError):
     """Invariant violation: double free, unknown owner, over-allocation."""
 
 
+def prefix_hashes(tokens, block_size: int) -> list:
+    """Chained digests, one per FULL block of `tokens`: hashes[i] commits to
+    tokens[0 : (i+1)*block_size], so equal hashes imply equal token prefixes
+    (up to digest collision) and therefore bitwise-equal KV content."""
+    t = np.ascontiguousarray(np.asarray(tokens, np.int32).reshape(-1))
+    out, h = [], b""
+    for i in range(t.shape[0] // block_size):
+        blk = t[i * block_size:(i + 1) * block_size].tobytes()
+        h = hashlib.blake2b(h + blk, digest_size=16).digest()
+        out.append(h)
+    return out
+
+
 @dataclass
 class BlockPool:
     num_blocks: int
     block_size: int
-    _free: list = field(init=False)
+    _free: deque = field(init=False)
+    _ref: list = field(init=False)        # block id -> refcount
     _owned: dict = field(init=False)      # rid -> ordered list of block ids
+    _index: dict = field(init=False)      # prefix hash -> block id
+    _hash_of: dict = field(init=False)    # block id -> prefix hash (inverse)
+    stats: dict = field(init=False)
 
     def __post_init__(self):
-        self._free = list(range(self.num_blocks - 1, -1, -1))  # LIFO
+        self._free = deque(range(self.num_blocks - 1, -1, -1))  # pops 0 first
+        self._ref = [0] * self.num_blocks
         self._owned = {}
+        self._index = {}
+        self._hash_of = {}
+        self.stats = {"lookups": 0, "hit_blocks": 0, "evictions": 0,
+                      "registrations": 0}
 
     # ------------------------------------------------------------- queries
     @property
     def num_free(self) -> int:
+        """Allocatable blocks. Includes refcount-zero cached blocks — they
+        hold reusable content but are reclaimed on demand (LRU)."""
         return len(self._free)
+
+    @property
+    def num_cached_free(self) -> int:
+        """Refcount-zero blocks kept only for their prefix-index content."""
+        return sum(1 for b in self._free if b in self._hash_of)
 
     @property
     def utilization(self) -> float:
@@ -44,6 +96,12 @@ class BlockPool:
     def can_alloc(self, n_blocks: int) -> bool:
         return n_blocks <= self.num_free
 
+    def admit_feasible(self, shared: list, n_fresh: int) -> bool:
+        """Can a request alias `shared` (possibly reviving cached-free
+        blocks) AND still allocate `n_fresh` fresh blocks?"""
+        revived = sum(1 for b in shared if self._ref[b] == 0)
+        return n_fresh <= len(self._free) - revived
+
     def table(self, rid) -> list:
         """Ordered block ids of a sequence (logical page i -> physical id)."""
         if rid not in self._owned:
@@ -52,41 +110,170 @@ class BlockPool:
 
     # ----------------------------------------------------------- mutation
     def alloc(self, rid, n_blocks: int) -> list:
-        """Append `n_blocks` fresh blocks to sequence `rid` (creating it)."""
-        if n_blocks > self.num_free:
+        """Append `n_blocks` fresh private blocks to sequence `rid` (creating
+        it). Popping a cached-free block evicts its prefix-index entry."""
+        if n_blocks > len(self._free):
             raise BlockPoolError(
-                f"need {n_blocks} blocks, only {self.num_free} free")
-        got = [self._free.pop() for _ in range(n_blocks)]
+                f"need {n_blocks} blocks, only {len(self._free)} free")
+        got = []
+        for _ in range(n_blocks):
+            b = self._free.pop()
+            if b in self._hash_of:                      # LRU eviction
+                del self._index[self._hash_of.pop(b)]
+                self.stats["evictions"] += 1
+            self._ref[b] = 1
+            got.append(b)
         self._owned.setdefault(rid, []).extend(got)
         return got
 
+    def share(self, rid, blocks: list) -> None:
+        """Alias existing blocks into `rid`'s table (refcount +1 each).
+        Blocks must be live (ref > 0) or cached in the prefix index; a
+        cached-free block is revived off the free list, content intact."""
+        if len(set(blocks)) != len(blocks):
+            raise BlockPoolError("share called with duplicate blocks")
+        row = self._owned.get(rid, [])
+        for b in blocks:                                # validate, no mutation
+            if not (0 <= b < self.num_blocks):
+                raise BlockPoolError(f"share of invalid block {b}")
+            if self._ref[b] == 0 and b not in self._hash_of:
+                raise BlockPoolError(f"share of free uncached block {b}")
+            if b in row:
+                raise BlockPoolError(
+                    f"block {b} already in table of {rid!r}")
+        self._owned.setdefault(rid, [])
+        for b in blocks:
+            if self._ref[b] == 0:
+                self._free.remove(b)                    # revive, content kept
+            self._ref[b] += 1
+            self._owned[rid].append(b)
+
+    def register(self, rid, block: int, key: bytes) -> bool:
+        """Publish an owned block under a prefix hash so later requests can
+        alias it. First writer wins: if `key` is already indexed (a
+        concurrent identical prompt), this is a no-op and the caller's block
+        stays private. Returns True iff the block was registered."""
+        if rid not in self._owned or block not in self._owned[rid]:
+            raise BlockPoolError(f"register: {rid!r} does not own {block}")
+        if key in self._index:
+            return False
+        old = self._hash_of.get(block)
+        if old is not None:
+            if old == key:
+                return False
+            raise BlockPoolError(f"block {block} already registered")
+        self._index[key] = block
+        self._hash_of[block] = key
+        self.stats["registrations"] += 1
+        return True
+
+    def match_prefix(self, keys: list) -> list:
+        """Longest chain of cached blocks for the given chained prefix
+        hashes: walks `keys` in order, stops at the first miss. Pure query —
+        the scheduler updates `stats` only on the attempt that admits, so a
+        blocked head request retried every step doesn't skew hit rates."""
+        got = []
+        for k in keys:
+            b = self._index.get(k)
+            if b is None:
+                break
+            got.append(b)
+        return got
+
     def free_seq(self, rid) -> int:
-        """Release every block of a sequence. Double-free raises."""
+        """Release every block of a sequence (refcount -1 each). Double-free
+        raises. Blocks hitting refcount zero return to the free list: plain
+        blocks at the hot end, prefix-cached blocks at the cold end so they
+        survive longest (LRU eviction order). Released in reverse table
+        order so a cached chain is evicted leaf-first — evicting the root
+        first would make every still-cached descendant unmatchable (match
+        walks the chain from the root)."""
         if rid not in self._owned:
             raise BlockPoolError(f"double free / unknown sequence {rid!r}")
         blocks = self._owned.pop(rid)
-        self._free.extend(reversed(blocks))
+        for b in reversed(blocks):
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                if b in self._hash_of:
+                    self._free.appendleft(b)            # evict-last, LRU
+                else:
+                    self._free.append(b)                # reuse-first
         return len(blocks)
+
+    def drop_cache(self) -> int:
+        """Clear the prefix index entirely. Cached-free blocks become plain
+        free blocks (content forgotten); live registered blocks stay owned
+        but are no longer shareable. Returns entries dropped."""
+        n = len(self._index)
+        self.stats["evictions"] += self.num_cached_free
+        self._index.clear()
+        self._hash_of.clear()
+        return n
 
     def defragment(self) -> np.ndarray:
         """Compact used blocks to the front of the pool.
 
         Returns `src` (num_blocks,) int32 such that the device pools must be
-        permuted as ``new_pool[i] = old_pool[src[i]]``; owner tables are
-        rewritten in place to the new dense ids."""
+        permuted as ``new_pool[i] = old_pool[src[i]]``. Owner tables are
+        rewritten in place to the new dense ids — a block shared by several
+        tables moves ONCE and every owner follows. Cached-free blocks keep
+        their content (they land right after the owned region) and the free
+        list keeps its order, so reuse preference and LRU are preserved."""
         src = np.empty(self.num_blocks, np.int32)
-        nxt = 0
-        for rid in self._owned:
-            new_ids = []
-            for old in self._owned[rid]:
+        remap, nxt = {}, 0
+
+        def place(old):
+            nonlocal nxt
+            if old not in remap:
+                remap[old] = nxt
                 src[nxt] = old
-                new_ids.append(nxt)
                 nxt += 1
-            self._owned[rid] = new_ids
-        n_used = nxt
-        leftover = sorted(self._free)
-        for old in leftover:
-            src[nxt] = old
-            nxt += 1
-        self._free = list(range(self.num_blocks - 1, n_used - 1, -1))
+            return remap[old]
+
+        for rid in self._owned:
+            self._owned[rid] = [place(b) for b in self._owned[rid]]
+        # cached-free blocks: content matters, keep them dense after the
+        # owned region (in free-list order)
+        for b in self._free:
+            if b in self._hash_of:
+                place(b)
+        # plain free blocks: content is garbage, they fill the tail
+        for b in self._free:
+            if b not in self._hash_of:
+                place(b)
+        assert nxt == self.num_blocks
+        self._free = deque(remap[b] for b in self._free)
+        self._index = {k: remap[b] for k, b in self._index.items()}
+        self._hash_of = {remap[b]: k for b, k in self._hash_of.items()}
+        ref = [0] * self.num_blocks
+        for old, new in remap.items():
+            ref[new] = self._ref[old]
+        self._ref = ref
         return src
+
+    # ------------------------------------------------------------ checking
+    def check(self) -> None:
+        """Assert every pool invariant (used by the property-test harness
+        after each step; cheap enough for test-time use)."""
+        counts = [0] * self.num_blocks
+        for rid, blocks in self._owned.items():
+            assert len(set(blocks)) == len(blocks), \
+                f"table of {rid!r} repeats a block"
+            for b in blocks:
+                counts[b] += 1
+        for b in range(self.num_blocks):
+            assert self._ref[b] == counts[b], \
+                f"block {b}: refcount {self._ref[b]} != {counts[b]} owners"
+        free = list(self._free)
+        assert len(free) == len(set(free)), "free list repeats a block"
+        for b in free:
+            assert self._ref[b] == 0, f"block {b} free but referenced"
+        assert len(free) + sum(1 for r in self._ref if r > 0) \
+            == self.num_blocks, "free + owned != pool"
+        for k, b in self._index.items():
+            assert self._hash_of.get(b) == k, "index/hash_of out of sync"
+        assert len(self._index) == len(self._hash_of), "index not a bijection"
+        free_set = set(free)
+        for b in self._hash_of:
+            assert self._ref[b] > 0 or b in free_set, \
+                f"registered block {b} neither owned nor free"

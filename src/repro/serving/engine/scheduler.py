@@ -1,14 +1,25 @@
-"""Continuous-batching scheduler: request queue, block-budget admission,
-chunked prefill interleaved with decode.
+"""Continuous-batching scheduler: request queue, block-budget admission with
+prefix-cache matching, chunked prefill interleaved with decode.
 
 Policy (one engine `step()`):
-  1. ADMIT  — pop waiting requests while a slot AND their full block
-              reservation (prompt + max_new tokens, conservative: no
-              preemption needed) are available.
+  1. ADMIT  — pop waiting requests while a slot AND their block reservation
+              are available. With prefix caching, the incoming prompt's
+              longest cached block-aligned prefix is aliased read-only into
+              the new table (refcount +1 per block) and the reservation is
+              charged ONLY for the uncached tail + generation budget, so a
+              cache hit both skips prefill compute and admits earlier.
   2. PREFILL — run up to `prefills_per_step` prompt chunks of admitted
-              requests (chunk = `prefill_chunk` tokens), so long prompts
-              never block the decode batch for more than one chunk.
+              requests (chunk = `prefill_chunk` tokens) starting at the
+              first uncached token, so long prompts never block the decode
+              batch for more than one chunk.
   3. DECODE — one batched token step over every DECODING slot.
+
+Copy-on-write rule: if the cached prefix covers the WHOLE prompt, the last
+matched block is not aliased — the engine copies its device content into a
+private block and re-prefills only the final prompt token into that copy, so
+the first-token logits exist and no shared block is ever written. Decode
+appends always land in privately-owned blocks (the tail reservation), so
+shared blocks stay read-only by construction.
 
 Requests are pure host-side state; all device work goes through the Engine's
 jitted functions.
@@ -21,7 +32,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.serving.engine.paged_cache import BlockPool, BlockPoolError
+from repro.serving.engine.paged_cache import (BlockPool, BlockPoolError,
+                                              prefix_hashes)
 
 WAITING, PREFILLING, DECODING, FINISHED = "waiting", "prefilling", "decoding", "finished"
 
@@ -38,6 +50,11 @@ class Request:
     slot: int = -1
     prefilled: int = 0                  # prompt tokens already in the pool
     out_tokens: list = field(default_factory=list)
+    # prefix caching (filled in at submit/admit time)
+    block_hashes: list = field(default_factory=list)   # chained, full blocks
+    shared_blocks: int = 0              # cached blocks aliased at admission
+    cow_src: Optional[int] = None       # block to copy-on-write, if any
+    registered: int = 0                 # prompt blocks published to the index
 
     @property
     def prompt_len(self) -> int:
@@ -54,12 +71,13 @@ class Request:
 class Scheduler:
     def __init__(self, pool: BlockPool, *, max_slots: int,
                  max_blocks_per_seq: int, prefill_chunk: int,
-                 prefills_per_step: int = 1):
+                 prefills_per_step: int = 1, prefix_caching: bool = True):
         self.pool = pool
         self.max_slots = max_slots
         self.max_blocks_per_seq = max_blocks_per_seq
         self.prefill_chunk = prefill_chunk
         self.prefills_per_step = prefills_per_step
+        self.prefix_caching = prefix_caching
         self.waiting: deque = deque()
         self.running: dict = {}         # rid -> Request (PREFILLING|DECODING)
         self._free_slots = list(range(max_slots - 1, -1, -1))
@@ -73,25 +91,63 @@ class Scheduler:
                 f"{self.max_blocks_per_seq}; raise max_blocks_per_seq/block_size")
         if need > self.pool.num_blocks:
             raise ValueError(f"request {req.rid}: larger than the whole pool")
+        if self.prefix_caching:
+            req.block_hashes = prefix_hashes(req.prompt, self.pool.block_size)
         self.waiting.append(req)
 
     def admit(self) -> list:
         """Admission by free-block budget: reserve blocks for the whole
         sequence (prompt + max_new) up front — with no preemption this
-        guarantees an admitted request always runs to completion."""
+        guarantees an admitted request always runs to completion. Cached
+        prefix blocks are aliased instead of allocated, so the budget only
+        charges for the uncached tail."""
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
             need = self.pool.blocks_for(req.prompt_len + req.max_new)
-            if not self.pool.can_alloc(need):
+            matched = (self.pool.match_prefix(req.block_hashes)
+                       if self.prefix_caching else [])
+            cow = None
+            if matched and len(matched) * self.pool.block_size == req.prompt_len:
+                # whole prompt cached: don't alias the last block — the
+                # engine copies it and re-runs the final prompt token there
+                # to produce the first-token logits (copy-on-write)
+                cow = matched[-1]
+                matched = matched[:-1]
+            if not self.pool.admit_feasible(matched, need - len(matched)):
                 break                   # FCFS: don't starve the head
             self.waiting.popleft()
-            self.pool.alloc(req.rid, need)
+            if self.prefix_caching:
+                self.pool.stats["lookups"] += 1
+                self.pool.stats["hit_blocks"] += \
+                    len(matched) + (1 if cow is not None else 0)
+            if matched:
+                self.pool.share(req.rid, matched)
+            self.pool.alloc(req.rid, need - len(matched))
+            req.shared_blocks = len(matched)
+            req.cow_src = cow
+            req.prefilled = (req.prompt_len - 1 if cow is not None
+                             else len(matched) * self.pool.block_size)
+            # shared blocks (and the CoW source's key) are already indexed
+            req.registered = len(matched) + (1 if cow is not None else 0)
             req.slot = self._free_slots.pop()
             req.state = PREFILLING
             self.running[req.rid] = req
             admitted.append(req)
         return admitted
+
+    def register_prefilled(self, req: Request) -> None:
+        """Publish the request's fully-prefilled prompt blocks to the prefix
+        index (chained hashes) so concurrent and future requests can alias
+        them. First writer wins on each key."""
+        if not self.prefix_caching:
+            return
+        row = self.pool.table(req.rid)
+        full = min(req.prefilled, req.prompt_len) // self.pool.block_size
+        while req.registered < min(full, len(req.block_hashes)):
+            i = req.registered
+            self.pool.register(req.rid, row[i], req.block_hashes[i])
+            req.registered += 1
 
     def next_prefills(self) -> list:
         """(request, start, valid_len) chunks to prefill this step."""

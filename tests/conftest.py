@@ -11,14 +11,6 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "serving: continuous-batching serving engine + paged attention "
-        "(CPU-only fast subset: `pytest -m serving`; Pallas runs interpret)")
-    config.addinivalue_line("markers", "slow: long-running tests")
-
-
 def run_multidev(code: str, devices: int = 8, timeout: int = 600):
     """Run `code` in a fresh python with N fake devices; returns stdout.
     The code should print 'PASS' on success."""

@@ -1,0 +1,449 @@
+"""Prefix caching in the paged KV pool: refcounted shared blocks, the prefix
+index, LRU eviction — plus a seeded property-test harness for `BlockPool`
+and engine-level soak/defrag equality against `serve.generate`.
+
+All CPU. Select with `pytest -m prefix_cache` (subset of `-m serving`).
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serving import serve
+from repro.serving.engine import (BlockPool, BlockPoolError, Engine,
+                                  EngineConfig, prefix_hashes)
+
+pytestmark = [pytest.mark.serving, pytest.mark.prefix_cache]
+
+
+# --------------------------------------------------------------- prefix hashes
+class TestPrefixHashes:
+    def test_full_blocks_only_and_chaining(self):
+        t = np.arange(11, dtype=np.int32)
+        h = prefix_hashes(t, 4)
+        assert len(h) == 2                        # 11 tokens, bs=4 -> 2 full
+        assert h == prefix_hashes(t[:8], 4)       # tail doesn't matter
+        t2 = t.copy()
+        t2[0] = 99                                # first block differs ...
+        h2 = prefix_hashes(t2, 4)
+        assert h2[0] != h[0] and h2[1] != h[1]    # ... chain diverges entirely
+        t3 = t.copy()
+        t3[5] = 99                                # second block differs
+        h3 = prefix_hashes(t3, 4)
+        assert h3[0] == h[0] and h3[1] != h[1]
+
+    def test_deterministic_across_calls(self):
+        t = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
+        assert prefix_hashes(t, 2) == prefix_hashes(t.copy(), 2)
+
+
+# ------------------------------------------------------------ pool prefix API
+class TestPoolPrefixAPI:
+    def _registered_seq(self, pool, rid, tokens):
+        hashes = prefix_hashes(tokens, pool.block_size)
+        pool.alloc(rid, pool.blocks_for(len(tokens)))
+        row = pool.table(rid)
+        for i, k in enumerate(hashes):
+            pool.register(rid, row[i], k)
+        return hashes
+
+    def test_share_refcount_and_release(self):
+        pool = BlockPool(8, 4)
+        t = np.arange(8, dtype=np.int32)
+        hashes = self._registered_seq(pool, "a", t)
+        matched = pool.match_prefix(hashes)
+        assert matched == pool.table("a")
+        pool.share("b", matched)
+        assert pool.table("b") == matched
+        pool.free_seq("a")
+        assert pool.num_free == 6                 # blocks still held by "b"
+        pool.free_seq("b")
+        assert pool.num_free == 8                 # ref 0 but still cached
+        assert pool.num_cached_free == 2
+        pool.check()
+
+    def test_cached_free_block_revives_with_content_slot(self):
+        pool = BlockPool(8, 4)
+        t = np.arange(8, dtype=np.int32)
+        hashes = self._registered_seq(pool, "a", t)
+        blocks = pool.table("a")
+        pool.free_seq("a")
+        matched = pool.match_prefix(hashes)
+        assert matched == blocks                  # same physical blocks
+        pool.share("b", matched)                  # revive off the free list
+        assert pool.num_free == 6
+        pool.check()
+
+    def test_lru_eviction_under_pressure(self):
+        pool = BlockPool(4, 4)
+        h1 = self._registered_seq(pool, "a", np.arange(4, dtype=np.int32))
+        h2 = self._registered_seq(pool, "b", np.arange(4, 8, dtype=np.int32))
+        pool.free_seq("a")                        # "a" freed first -> older
+        pool.free_seq("b")
+        pool.alloc("c", 3)                        # 2 plain + oldest cached
+        assert pool.stats["evictions"] == 1
+        assert pool.match_prefix(h1) == []        # "a" evicted (LRU)
+        assert len(pool.match_prefix(h2)) == 1    # "b" survived
+        pool.check()
+
+    def test_chain_evicts_leaf_first(self):
+        """Eviction inside one released chain goes leaf-first: evicting the
+        root would orphan every still-cached descendant (match walks the
+        chain from the root)."""
+        pool = BlockPool(6, 4)
+        h = self._registered_seq(pool, "a", np.arange(12, dtype=np.int32))
+        pool.free_seq("a")
+        pool.alloc("b", 4)                        # 3 plain + 1 eviction
+        assert pool.stats["evictions"] == 1
+        assert len(pool.match_prefix(h)) == 2     # root survived, leaf gone
+        pool.check()
+
+    def test_plain_free_blocks_preferred_over_cached(self):
+        pool = BlockPool(6, 4)
+        h = self._registered_seq(pool, "a", np.arange(4, dtype=np.int32))
+        pool.alloc("b", 2)
+        pool.free_seq("a")
+        pool.free_seq("b")
+        pool.alloc("c", 5)                        # 5 of 6: keep the cached one
+        assert pool.stats["evictions"] == 0
+        assert len(pool.match_prefix(h)) == 1
+        pool.check()
+
+    def test_register_first_writer_wins(self):
+        pool = BlockPool(8, 4)
+        t = np.arange(4, dtype=np.int32)
+        hashes = self._registered_seq(pool, "a", t)
+        pool.alloc("b", 1)
+        assert not pool.register("b", pool.table("b")[0], hashes[0])
+        assert pool.match_prefix(hashes) == pool.table("a")
+        pool.check()
+
+    def test_share_errors(self):
+        pool = BlockPool(8, 4)
+        pool.alloc("a", 2)
+        with pytest.raises(BlockPoolError):
+            pool.share("b", [7])                  # free and uncached
+        with pytest.raises(BlockPoolError):
+            pool.share("b", [99])                 # out of range
+        blk = pool.table("a")[0]
+        with pytest.raises(BlockPoolError):
+            pool.share("a", [blk])                # already in own table
+        with pytest.raises(BlockPoolError):
+            pool.share("b", [blk, blk])           # duplicate in one call
+        pool.check()
+
+    def test_double_release_raises(self):
+        pool = BlockPool(8, 4)
+        self._registered_seq(pool, "a", np.arange(8, dtype=np.int32))
+        pool.share("b", pool.table("a"))
+        pool.free_seq("b")
+        with pytest.raises(BlockPoolError):
+            pool.free_seq("b")
+        pool.free_seq("a")
+        with pytest.raises(BlockPoolError):
+            pool.free_seq("a")
+
+    def test_drop_cache_empties_index(self):
+        pool = BlockPool(8, 4)
+        h = self._registered_seq(pool, "a", np.arange(8, dtype=np.int32))
+        pool.free_seq("a")
+        assert pool.num_cached_free == 2
+        assert pool.drop_cache() == 2
+        assert pool.num_cached_free == 0
+        assert pool.match_prefix(h) == []
+        assert pool.num_free == 8
+        pool.check()
+
+    def test_defragment_under_aliasing_rewrites_all_owners(self):
+        pool = BlockPool(12, 4)
+        t = np.arange(8, dtype=np.int32)
+        hashes = self._registered_seq(pool, "a", t)
+        pool.alloc("hole", 2)
+        pool.share("b", pool.match_prefix(hashes))
+        pool.alloc("b", 1)
+        pool.free_seq("hole")                     # holes before b's tail
+        pre_a, pre_b = pool.table("a"), pool.table("b")
+        assert pre_a == pre_b[:2]                 # aliased prefix
+        src = pool.defragment()
+        assert sorted(src.tolist()) == list(range(12))
+        post_a, post_b = pool.table("a"), pool.table("b")
+        assert post_a == post_b[:2]               # still aliased, consistently
+        for old, new in zip(pre_a + pre_b, post_a + post_b):
+            assert src[new] == old                # content follows each block
+        # the index followed the shared blocks too
+        assert pool.match_prefix(hashes) == post_a
+        pool.check()
+
+
+# ---------------------------------------------------------- property harness
+def _consistent_remap(pre_tables, pool, src):
+    """After defrag: every owner's table was rewritten by ONE old->new map
+    and `src` moves each block's content to its new id."""
+    remap = {}
+    for rid, pre in pre_tables.items():
+        post = pool.table(rid)
+        assert len(post) == len(pre)
+        for old, new in zip(pre, post):
+            assert remap.setdefault(old, new) == new
+            assert src[new] == old
+    return {rid: pool.table(rid) for rid in pre_tables}
+
+
+EPISODES = 220
+
+
+@pytest.mark.parametrize("seed", range(EPISODES))
+def test_blockpool_random_episode(seed):
+    """Seeded randomized episode: interleaved admit-style share+alloc,
+    release, register, defrag, drop_cache and error probes, with the full
+    invariant check (`BlockPool.check` + shadow tables) after every step."""
+    rng = random.Random(seed)
+    bs = rng.choice([2, 4, 8])
+    num_blocks = rng.choice([12, 16, 32])
+    pool = BlockPool(num_blocks, bs)
+    owners = {}                                   # rid -> expected table
+    base = [rng.randrange(6) for _ in range(4 * bs)]   # shared-prefix stock
+    next_rid = 0
+
+    for _ in range(rng.randint(40, 90)):
+        op = rng.random()
+        if op < 0.45:                             # admission: share + alloc
+            keep = rng.randrange(0, 4 * bs + 1)
+            tail = [rng.randrange(6) for _ in range(rng.randint(1, 2 * bs))]
+            prompt = np.asarray(base[:keep] + tail, np.int32)
+            hashes = prefix_hashes(prompt, bs)
+            matched = pool.match_prefix(hashes)
+            if matched and len(matched) * bs == len(prompt):
+                matched = matched[:-1]            # CoW rule: keep a tail
+            need = pool.blocks_for(len(prompt) + rng.randint(1, bs))
+            if pool.admit_feasible(matched, need - len(matched)):
+                rid = next_rid
+                next_rid += 1
+                if matched:
+                    pool.share(rid, matched)
+                fresh = pool.alloc(rid, need - len(matched))
+                owners[rid] = list(matched) + fresh
+                row = pool.table(rid)
+                upto = rng.randint(len(matched), len(hashes))
+                for i in range(len(matched), upto):
+                    pool.register(rid, row[i], hashes[i])
+        elif op < 0.70 and owners:                # release
+            rid = rng.choice(sorted(owners))
+            pool.free_seq(rid)
+            del owners[rid]
+            with pytest.raises(BlockPoolError):   # double-release raises
+                pool.free_seq(rid)
+        elif op < 0.80:                           # defrag
+            pre = {r: list(t) for r, t in owners.items()}
+            src = pool.defragment()
+            assert sorted(src.tolist()) == list(range(num_blocks))
+            owners = _consistent_remap(pre, pool, src)
+        elif op < 0.88:                           # cache flush
+            pool.drop_cache()
+            assert pool.num_cached_free == 0
+        else:                                     # error probes
+            with pytest.raises(BlockPoolError):
+                pool.alloc("probe", pool.num_free + 1)
+            assert "probe" not in pool._owned
+            with pytest.raises(BlockPoolError):
+                pool.table("no-such-seq")
+
+        pool.check()
+        for rid, expect in owners.items():        # shadow cross-check
+            assert pool.table(rid) == expect
+        assert (pool.num_free
+                == num_blocks - len({b for t in owners.values() for b in t}))
+
+    # drain: release everything, flush the index -> pristine pool
+    for rid in sorted(owners):
+        pool.free_seq(rid)
+    pool.drop_cache()
+    pool.check()
+    assert pool.num_free == num_blocks
+    assert pool.num_cached_free == 0
+    assert pool.match_prefix(prefix_hashes(np.asarray(base, np.int32), bs)) == []
+
+
+# ------------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def cfg():
+    return ModelConfig(name="pc-t", family="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=50, loss_chunk=16, attn_chunk=16,
+                       remat=False, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **kw):
+    base = dict(block_size=4, num_blocks=64, max_blocks_per_seq=8,
+                max_slots=4, prefill_chunk=8)
+    base.update(kw)
+    return Engine(cfg, params, EngineConfig(**base))
+
+
+def _ref(cache, cfg, params, prompt, max_new):
+    key = (prompt.tobytes(), max_new)
+    if key not in cache:
+        cache[key] = np.asarray(serve.generate(
+            cfg, params, jnp.asarray(prompt)[None], max_new=max_new,
+            temperature=0.0))[0]
+    return cache[key]
+
+
+# ------------------------------------------------------------- engine: hits
+class TestEnginePrefixCaching:
+    def test_replay_hits_and_stays_bit_identical(self, cfg, params):
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, 50, size=13).astype(np.int32)
+        eng = _engine(cfg, params)
+        r1 = eng.add_request(prompt, 5)
+        o1 = eng.drain()
+        chunks_first = eng.stats["prefill_chunks"]
+        r2 = eng.add_request(prompt, 5)
+        o2 = eng.drain()
+        np.testing.assert_array_equal(o1[r1], o2[r2])
+        assert eng.stats["prefix_hit_tokens"] == 12          # 3 full blocks
+        assert eng.stats["prefill_chunks"] == chunks_first + 1   # tail only
+        ref = _ref({}, cfg, params, prompt, 5)
+        np.testing.assert_array_equal(o2[r2], ref)
+
+    def test_fully_cached_prompt_copy_on_write(self, cfg, params):
+        """Prompt length an exact multiple of block_size: the whole prompt is
+        cached, so the engine CoW-copies the last block and re-runs only the
+        final prompt token for its logits."""
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(0, 50, size=12).astype(np.int32)   # 3 blocks
+        eng = _engine(cfg, params)
+        r1 = eng.add_request(prompt, 6)
+        o1 = eng.drain()
+        r2 = eng.add_request(prompt, 6)
+        o2 = eng.drain()
+        assert eng.stats["cow_copies"] == 1
+        assert eng.stats["prefix_hit_tokens"] == 11          # all but 1 token
+        np.testing.assert_array_equal(o1[r1], o2[r2])
+        np.testing.assert_array_equal(o2[r2], _ref({}, cfg, params, prompt, 6))
+        # shared blocks were never written: a third replay still matches
+        r3 = eng.add_request(prompt, 6)
+        o3 = eng.drain()
+        np.testing.assert_array_equal(o3[r3], o1[r1])
+
+    def test_concurrent_sharers_alias_blocks(self, cfg, params):
+        """Staggered arrivals with a common prefix: later requests alias the
+        first request's registered blocks while it is still running."""
+        rng = np.random.default_rng(2)
+        pre = rng.integers(0, 50, size=8).astype(np.int32)
+        tails = [rng.integers(0, 50, size=k).astype(np.int32) for k in (3, 5)]
+        prompts = [np.concatenate([pre, t]) for t in tails]
+        eng = _engine(cfg, params, max_slots=3)
+        r0 = eng.add_request(prompts[0], 8)
+        eng.step()                                # prefill + register pre
+        rids = [eng.add_request(p, 8) for p in prompts[1:]] + [r0]
+        eng.step()
+        row0 = eng.block_pool.table(r0)
+        row1 = eng.block_pool.table(rids[0])
+        assert row0[:2] == row1[:2]               # physical aliasing
+        assert eng.block_pool._ref[row0[0]] >= 2
+        outs = eng.drain()
+        refs = {}
+        for rid, p in zip([r0] + rids[:-1], prompts):
+            np.testing.assert_array_equal(outs[rid], _ref(refs, cfg, params, p, 8))
+        assert eng.stats["prefix_hit_tokens"] > 0
+        assert eng.block_pool.num_free == eng.ecfg.num_blocks
+        eng.block_pool.check()
+
+    def test_defrag_under_aliasing_device_matches_host(self, cfg, params):
+        """Mid-flight defragment with live multi-owner blocks: every owner's
+        table is rewritten consistently and the device pool gather matches
+        the host permutation exactly."""
+        rng = np.random.default_rng(3)
+        pre = rng.integers(0, 50, size=8).astype(np.int32)
+        prompts = [np.concatenate([pre, rng.integers(0, 50, size=k)
+                                   .astype(np.int32)]) for k in (2, 4, 6)]
+        eng = _engine(cfg, params, num_blocks=32, max_slots=3)
+        r0 = eng.add_request(prompts[0], 10)
+        eng.step()                                # register the prefix
+        r1 = eng.add_request(prompts[1], 10)
+        r2 = eng.add_request(prompts[2], 10)
+        eng.step()
+        tables_pre = {r: eng.block_pool.table(r) for r in (r0, r1, r2)}
+        shared = set(tables_pre[r0][:2])
+        assert shared == set(tables_pre[r1][:2]) == set(tables_pre[r2][:2])
+        before = jax.tree.map(np.asarray, eng.pool_state)
+        src = eng.defragment()
+        after = jax.tree.map(np.asarray, eng.pool_state)
+        for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(a, b[:, src])
+        _consistent_remap(tables_pre, eng.block_pool, src)
+        # shared blocks still shared (moved once)
+        post0 = eng.block_pool.table(r0)
+        assert post0[:2] == eng.block_pool.table(r1)[:2] \
+            == eng.block_pool.table(r2)[:2]
+        outs = eng.drain()
+        refs = {}
+        for rid, p in zip((r0, r1, r2), prompts):
+            np.testing.assert_array_equal(outs[rid],
+                                          _ref(refs, cfg, params, p, 10))
+        eng.block_pool.check()
+
+    def test_soak_equality_with_and_without_caching(self, cfg, params):
+        """Randomized arrival traffic (mixed lengths, heavy shared-prefix
+        mix, forced evictions via a tiny pool) run to drain: greedy outputs
+        are bit-identical to serve.generate per request, with caching on and
+        off."""
+        rng = np.random.default_rng(7)
+        prefixes = [rng.integers(0, 50, size=s).astype(np.int32)
+                    for s in (8, 12, 16)]
+        reqs = []
+        for i in range(12):
+            pre = prefixes[int(rng.integers(len(prefixes)))]
+            tail = rng.integers(0, 50,
+                                size=int(rng.integers(0, 3)) * 4).astype(np.int32)
+            prompt = np.concatenate([pre, tail]) if tail.size else pre.copy()
+            reqs.append((prompt, int(rng.integers(2, 7))))
+        refs = {}
+        outs_by_mode = {}
+        for caching in (True, False):
+            eng = _engine(cfg, params, num_blocks=16, max_slots=3,
+                          prefix_caching=caching)
+            order = rng.permutation(len(reqs)) if caching else \
+                np.asarray(sorted(range(len(reqs))))
+            rids = {}
+            for i in order:
+                prompt, mn = reqs[int(i)]
+                rids[int(i)] = eng.add_request(prompt, mn)
+                for _ in range(int(rng.integers(0, 3))):
+                    eng.step()
+            outs = eng.drain()
+            for i, (prompt, mn) in enumerate(reqs):
+                got = outs[rids[i]]
+                np.testing.assert_array_equal(
+                    got, _ref(refs, cfg, params, prompt, mn),
+                    err_msg=f"caching={caching} request {i}")
+            outs_by_mode[caching] = {i: outs[rids[i]] for i in rids}
+            assert eng.block_pool.num_free == eng.ecfg.num_blocks
+            eng.block_pool.check()
+            if caching:
+                assert eng.stats["prefix_hit_tokens"] > 0
+                assert eng.block_pool.stats["evictions"] > 0   # tiny pool
+        for i in outs_by_mode[True]:
+            np.testing.assert_array_equal(outs_by_mode[True][i],
+                                          outs_by_mode[False][i])
+
+    def test_caching_off_never_registers(self, cfg, params):
+        rng = np.random.default_rng(8)
+        prompt = rng.integers(0, 50, size=12).astype(np.int32)
+        eng = _engine(cfg, params, prefix_caching=False)
+        r1 = eng.add_request(prompt, 4)
+        eng.drain()
+        r2 = eng.add_request(prompt, 4)
+        eng.drain()
+        assert eng.stats["prefix_hit_tokens"] == 0
+        assert eng.block_pool.stats["registrations"] == 0
