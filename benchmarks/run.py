@@ -2,7 +2,9 @@
 Prints `name,us_per_call,derived` CSV rows.
 
 `--serving-workload mixed|shared|both` is passed through to
-benchmarks.serving_bench (shared = the prefix-caching comparison)."""
+benchmarks.serving_bench (shared = the prefix-caching comparison);
+`--serving-family full|sliding|ssm|hybrid|all` adds the per-family
+state-provider sweep."""
 import argparse
 import sys
 import traceback
@@ -26,13 +28,19 @@ MODULES = [
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--serving-workload", choices=("mixed", "shared", "both"),
+    ap.add_argument("--serving-workload",
+                    choices=("mixed", "shared", "both", "none"),
                     default="both", help="workload(s) for serving_bench")
+    ap.add_argument("--serving-family",
+                    choices=("full", "sliding", "ssm", "hybrid", "all"),
+                    default=None,
+                    help="per-family state-provider sweep for serving_bench")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
     for mod_name in MODULES:
-        kwargs = ({"workload": args.serving_workload}
+        kwargs = ({"workload": args.serving_workload,
+                   "config_family": args.serving_family}
                   if mod_name == "benchmarks.serving_bench" else {})
         try:
             mod = __import__(mod_name, fromlist=["main"])

@@ -19,11 +19,18 @@ run with prefix caching ON vs OFF (cache primed by one untimed request in
 both modes so the comparison is steady-state); rows report cache hit rate,
 prefill tokens saved, and the on/off speedup.
 
+Per-family mode (`--config-family full|sliding|ssm|hybrid|all`) runs a
+chat-shaped workload through the engine for that model family's state
+providers and reports tokens/s, per-slot sequence-state memory (the
+provider's per-kind cost: paged KV for full, ring-capped KV for sliding,
+O(1) slabs for ssm, the mix for hybrid), and peak block-pool utilization.
+
 Rows: tokens/s, engine decode-batch occupancy, p50/p99 per-token latency
 (wall time of the engine step that emitted each token, measured in a
 separate synced pass so async dispatch can't hide compute), and the prefix-
 cache metrics. `main(workload=...)` accepts "mixed" | "shared" | "both";
-`benchmarks/run.py --serving-workload` passes it through.
+`benchmarks/run.py --serving-workload` passes it through
+(`--serving-family` likewise forwards the family sweep).
 """
 import argparse
 import time
@@ -34,9 +41,12 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.base import ModelConfig
+from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import serve
 from repro.serving.engine import Engine, EngineConfig
+
+FAMILIES = ("full", "sliding", "ssm", "hybrid")
 
 
 def _cfg():
@@ -44,6 +54,25 @@ def _cfg():
                        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
                        d_ff=512, vocab_size=256, loss_chunk=64, attn_chunk=128,
                        remat=False, dtype="float32")
+
+
+def _family_cfg(family):
+    base = dict(num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+                head_dim=64, d_ff=512, vocab_size=256, loss_chunk=64,
+                attn_chunk=128, remat=False, dtype="float32")
+    if family == "full":
+        return ModelConfig(name="sb-full", family="dense", **base)
+    if family == "sliding":
+        return ModelConfig(name="sb-sliding", family="dense",
+                           attention_type="sliding", window_size=32, **base)
+    if family == "ssm":
+        return ModelConfig(name="sb-ssm", family="ssm", ssm_type="rwkv6",
+                           ssm_head_dim=64, **base)
+    if family == "hybrid":
+        return ModelConfig(name="sb-hybrid", family="hybrid",
+                           hybrid_ssm_per_attn=1, ssm_state_dim=16,
+                           ssm_head_dim=64, **base)
+    raise ValueError(f"unknown family {family!r}")
 
 
 def _workload(n=24, seed=0):
@@ -214,19 +243,65 @@ def _main_shared(cfg, params):
          f"{tps_cache / tps_nocache:.2f}x")
 
 
-def main(workload: str = "both"):
-    if workload not in ("mixed", "shared", "both"):
-        raise ValueError(f"unknown workload {workload!r}")
-    cfg = _cfg()
+def _main_family(family):
+    """One model family through the engine: tokens/s, per-slot state memory
+    (from the family's providers), and peak block-pool utilization."""
+    cfg = _family_cfg(family)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    if workload in ("mixed", "both"):
-        _main_mixed(cfg, params)
-    if workload in ("shared", "both"):
-        _main_shared(cfg, params)
+    ecfg = EngineConfig(block_size=8, num_blocks=128, max_blocks_per_seq=16,
+                        max_slots=MAX_SLOTS, prefill_chunk=16,
+                        prefills_per_step=2)
+    prompts, max_news = _workload(n=16, seed=4)
+
+    def run():
+        eng = Engine(cfg, params, ecfg)
+        for p, mn in zip(prompts, max_news):
+            eng.add_request(p, mn)
+        peak = 0.0
+        t0 = time.perf_counter()
+        while eng.scheduler.has_work:
+            eng.step()
+            peak = max(peak, eng.block_pool.utilization)
+        outs = eng.drain()
+        wall = time.perf_counter() - t0
+        return eng, sum(o.shape[0] for o in outs.values()), wall, peak
+
+    run()                                          # warmup / compile
+    eng, total, wall, peak = run()
+
+    # per-slot state budget at the workload's worst-case context length
+    worst = max(p.shape[0] + m for p, m in zip(prompts, max_news))
+    mem = SP.state_memory_per_slot(cfg, eng.providers, worst)
+    emit(f"serving_family_{family}_tokens_per_s", wall / total * 1e6,
+         f"{total / wall:.1f}")
+    emit(f"serving_family_{family}_state_kb_per_slot", None,
+         f"{mem / 1024:.1f}")
+    emit(f"serving_family_{family}_peak_pool_utilization", None,
+         f"{peak:.3f}")
+
+
+def main(workload: str = "both", config_family: str = None):
+    if workload not in ("mixed", "shared", "both", "none"):
+        raise ValueError(f"unknown workload {workload!r}")
+    if workload != "none":
+        cfg = _cfg()
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        if workload in ("mixed", "both"):
+            _main_mixed(cfg, params)
+        if workload in ("shared", "both"):
+            _main_shared(cfg, params)
+    if config_family:
+        fams = FAMILIES if config_family == "all" else (config_family,)
+        for fam in fams:
+            _main_family(fam)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("mixed", "shared", "both"),
+    ap.add_argument("--workload", choices=("mixed", "shared", "both", "none"),
                     default="both")
-    main(ap.parse_args().workload)
+    ap.add_argument("--config-family",
+                    choices=FAMILIES + ("all",), default=None,
+                    help="also run the per-family state-provider sweep")
+    args = ap.parse_args()
+    main(args.workload, args.config_family)

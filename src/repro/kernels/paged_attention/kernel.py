@@ -15,6 +15,16 @@ steps of one sequence, exactly like the flash_attention kernel's kv axis.
 Grid: (B, P) with the page axis innermost ("arbitrary" semantics). Pages at
 or beyond seq_len are skipped (`pl.when`), so the work per sequence is
 O(seq_len), not O(P * block_size).
+
+Ring mode (`window` + `ring_pages` set, `positions` prefetched as a third
+scalar array): sliding-window layers keep a fixed ring of `ring_pages`
+blocks per sequence — token at absolute position p lives at
+`table[(p // bs) % R]`, offset `p % bs`. The grid's page axis shrinks to R
+and each grid step reconstructs the absolute page its ring slot currently
+holds (`q_cur - ((q_cur % R - r) % R)`), masking keys outside
+`(position - window, position]`. Stale previous-lap offsets in the current
+page reconstruct to positions > position, so the causal bound masks them;
+pages wholly outside the window (or not yet written) are skipped.
 """
 from __future__ import annotations
 
@@ -72,16 +82,109 @@ def paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / denom).reshape(H, hd).astype(o_ref.dtype)
 
 
+def paged_ring_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref, v_ref,
+                      o_ref, m_ref, l_ref, acc_ref, *, scale, block_size,
+                      pages, groups, window):
+    """Ring-mode body: grid (B, R). `pages` is the ring length R; `pos_ref`
+    holds each sequence's current absolute position (scalar-prefetched so
+    the index map can still walk the block table)."""
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+    pos = pos_ref[b]
+    q_cur = pos // block_size
+    # absolute page currently held by ring slot r (negative: never written)
+    page = q_cur - ((q_cur % pages - r) % pages)
+    base = page * block_size
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = ((lens_ref[b] > 0) & (page >= 0) & (base <= pos)
+            & (base + block_size - 1 > pos - window))
+
+    @pl.when(live)
+    def _compute():
+        H, hd = q_ref.shape[1], q_ref.shape[2]
+        Hkv = H // groups
+        q = q_ref[0].astype(jnp.float32).reshape(Hkv, groups, hd)
+        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)            # (Hkv, bs, hd)
+        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = base + jax.lax.broadcasted_iota(
+            jnp.int32, (Hkv, groups, block_size), 2)
+        # stale previous-lap offsets in the current page have kpos > pos
+        s = jnp.where((kpos <= pos) & (kpos > pos - window), s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        prob = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, axis=2, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            prob, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(r == pages - 1)
+    def _finish():
+        H, hd = o_ref.shape[1], o_ref.shape[2]
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).reshape(H, hd).astype(o_ref.dtype)
+
+
 def paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens, *,
-                           scale=None, interpret=False):
+                           scale=None, window=None, positions=None,
+                           ring_pages=None, interpret=False):
     """q: (B, H, hd); k_pool/v_pool: (N, bs, Hkv, hd) with H % Hkv == 0;
     block_tables: (B, P) int32; seq_lens: (B,) int32 (0 = inactive slot,
-    current token already written to the pool). Returns (B, H, hd)."""
+    current token already written to the pool). Returns (B, H, hd).
+
+    window/positions/ring_pages (all three) switch to ring mode: the page
+    grid axis becomes `ring_pages` and keys are masked to the sliding
+    window (positions - window, positions]."""
     B, H, hd = q.shape
     N, bs, Hkv, _ = k_pool.shape
     P = block_tables.shape[1]
     groups = H // Hkv
     scale = scale if scale is not None else hd ** -0.5
+
+    if window is not None:
+        if positions is None or ring_pages is None:
+            raise ValueError("ring mode needs window, positions AND ring_pages")
+        R = ring_pages
+        kern = functools.partial(
+            paged_ring_kernel, scale=scale, block_size=bs, pages=R,
+            groups=groups, window=window)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, R),
+            in_specs=[
+                pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens, pos: (b, 0, 0)),
+                pl.BlockSpec((1, bs, Hkv, hd),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+                pl.BlockSpec((1, bs, Hkv, hd),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, hd),
+                                   lambda b, p, tbl, lens, pos: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Hkv, groups, 1), jnp.float32),
+                pltpu.VMEM((Hkv, groups, 1), jnp.float32),
+                pltpu.VMEM((Hkv, groups, hd), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            kern,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+            interpret=interpret,
+        )(block_tables, seq_lens, positions.astype(jnp.int32), q, k_pool,
+          v_pool)
 
     kern = functools.partial(
         paged_kernel, scale=scale, block_size=bs, pages=P, groups=groups)

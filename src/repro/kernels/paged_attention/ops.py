@@ -1,4 +1,9 @@
-"""jit'd wrapper: paged decode attention over block-pooled KV layouts."""
+"""jit'd wrapper: paged decode attention over block-pooled KV layouts.
+
+Full mode attends the whole logical prefix through the block table; ring
+mode (window/positions/ring_pages set) attends the sliding window
+(position - window, position] through a fixed ring of `ring_pages` blocks.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -13,12 +18,16 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "window", "ring_pages"))
 def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
+                    window=None, positions=None, ring_pages=None,
                     interpret=None):
     """q: (B, H, hd); k_pool/v_pool: (N, block_size, Hkv, hd); block_tables:
     (B, P) int32; seq_lens: (B,) int32 — valid tokens per sequence including
-    the current one (0 marks an inactive slot). Returns (B, H, hd)."""
+    the current one (0 marks an inactive slot). Ring mode: `window` and
+    `ring_pages` are static, `positions` (B,) carries each sequence's
+    current absolute position. Returns (B, H, hd)."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     return paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens,
-                                  interpret=interpret)
+                                  window=window, positions=positions,
+                                  ring_pages=ring_pages, interpret=interpret)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for paged decode attention.
+"""Pure-jnp oracle for paged decode attention (full and ring/sliding-window).
 
 One query token per sequence attends over KV stored in a block pool via a
 per-sequence block table. Semantics:
@@ -10,6 +10,16 @@ per-sequence block table. Semantics:
   * ``seq_lens[b] == 0`` marks an inactive slot: the output row is all zeros.
   * Table entries past the sequence's last page may point anywhere inside the
     pool; their contents are masked out.
+
+Ring mode (``window`` + ``positions`` + ``ring_pages`` set): the sequence
+only owns ``ring_pages`` blocks and token at absolute position p was written
+at ``table[(p // bs) % ring_pages]``, offset ``p % bs``. The oracle inverts
+that mapping — ring slot r currently holds absolute page
+``q_cur - ((q_cur % R - r) % R)`` where ``q_cur = position // bs`` — and
+attends exactly the window ``(position - window, position]``. Offsets past
+``position % bs`` in the current page still hold the previous lap's keys;
+their reconstructed positions exceed ``position`` so the causal bound masks
+them.
 """
 import jax
 import jax.numpy as jnp
@@ -17,30 +27,67 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens, *, scale=None):
-    """q: (B, H, hd); k_pool/v_pool: (N, bs, Hkv, hd);
-    block_tables: (B, P) int32; seq_lens: (B,) int32. Returns (B, H, hd)."""
+def _masked_gqa_attend(q, k, v, valid, scale):
+    """q: (B, H, hd); k/v: (B, K, Hkv, hd); valid: (B, K) bool mask.
+    Max-subtracted softmax with a guarded denominator so fully-masked rows
+    (inactive slots) produce zeros instead of NaN. Returns (B, H, hd)."""
     B, H, hd = q.shape
-    N, bs, Hkv, _ = k_pool.shape
-    P = block_tables.shape[1]
+    Hkv = k.shape[2]
     g = H // Hkv
-    scale = scale if scale is not None else hd ** -0.5
-
-    # gather pages -> contiguous (B, P*bs, Hkv, hd) view of each sequence;
-    # GQA stays grouped (no repeated K/V materialization)
-    k = k_pool[block_tables].reshape(B, P * bs, Hkv, hd)
-    v = v_pool[block_tables].reshape(B, P * bs, Hkv, hd)
     qg = q.reshape(B, Hkv, g, hd)
-
     s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale                 # (B,Hkv,g,K)
-    valid = jnp.arange(P * bs)[None, :] < seq_lens[:, None]       # (B, P*bs)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    # max-subtracted softmax with a guarded denominator so fully-masked rows
-    # (inactive slots) produce zeros instead of NaN
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - jnp.maximum(m, NEG_INF / 2))
     p = jnp.where(valid[:, None, None, :], p, 0.0)
     denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     out = jnp.einsum("bhgk,bkhd->bhgd", p / denom, v.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def ring_key_positions(positions, ring_pages, block_size):
+    """Absolute position of every (ring slot, offset) pair, per sequence.
+    positions: (B,) current absolute position. Returns (B, R*bs) int32;
+    entries may be negative (page not yet written) or > positions (stale
+    previous-lap offsets) — callers mask both."""
+    R, bs = ring_pages, block_size
+    q_cur = positions // bs                                       # (B,)
+    r_cur = q_cur % R
+    page = q_cur[:, None] - ((r_cur[:, None] - jnp.arange(R)[None, :]) % R)
+    kpos = page[:, :, None] * bs + jnp.arange(bs)[None, None, :]  # (B, R, bs)
+    return kpos.reshape(positions.shape[0], R * bs)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
+                        scale=None, window=None, positions=None,
+                        ring_pages=None):
+    """q: (B, H, hd); k_pool/v_pool: (N, bs, Hkv, hd);
+    block_tables: (B, P) int32; seq_lens: (B,) int32. Returns (B, H, hd).
+
+    window/positions/ring_pages switch on ring mode (all three required):
+    attend the sliding window (positions - window, positions] through the
+    ring block layout."""
+    B, H, hd = q.shape
+    N, bs, Hkv, _ = k_pool.shape
+    scale = scale if scale is not None else hd ** -0.5
+
+    if window is None:
+        P = block_tables.shape[1]
+        k = k_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+        v = v_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+        valid = jnp.arange(P * bs)[None, :] < seq_lens[:, None]
+        return _masked_gqa_attend(q, k, v, valid, scale)
+
+    if positions is None or ring_pages is None:
+        raise ValueError("ring mode needs window, positions AND ring_pages")
+    R = ring_pages
+    tables = block_tables[:, :R]
+    k = k_pool[tables].reshape(B, R * bs, Hkv, hd)
+    v = v_pool[tables].reshape(B, R * bs, Hkv, hd)
+    kpos = ring_key_positions(positions, R, bs)                   # (B, R*bs)
+    valid = ((kpos >= 0)
+             & (kpos <= positions[:, None])
+             & (kpos > positions[:, None] - window)
+             & (seq_lens[:, None] > 0))
+    return _masked_gqa_attend(q, k, v, valid, scale)

@@ -180,15 +180,21 @@ def attention_prefill(params, x, cache, cfg, *, window=None):
 
 
 # ------------------------------------------------------------ paged decode
-def paged_write(kv, k_new, v_new, block_tables, positions, active):
+def paged_write(kv, k_new, v_new, block_tables, positions, active, *,
+                ring_pages=None):
     """Scatter one token's K/V per sequence into the block pool.
 
     kv: {"k","v"}: (N, bs, Hkv, hd); k_new/v_new: (B, Hkv, hd);
     block_tables: (B, P); positions: (B,) absolute token position;
-    active: (B,) bool — inactive rows are dropped (OOB block id)."""
+    active: (B,) bool — inactive rows are dropped (OOB block id).
+    ring_pages: sliding-window layers write page (pos // bs) % ring_pages
+    so the sequence never touches more than ring_pages blocks."""
     N, bs = kv["k"].shape[0], kv["k"].shape[1]
     B = positions.shape[0]
-    bids = block_tables[jnp.arange(B), positions // bs]
+    pages = positions // bs
+    if ring_pages is not None:
+        pages = pages % ring_pages
+    bids = block_tables[jnp.arange(B), pages]
     bids = jnp.where(active, bids, N)       # OOB => mode="drop"
     offs = positions % bs
     return {
@@ -198,27 +204,32 @@ def paged_write(kv, k_new, v_new, block_tables, positions, active):
 
 
 def attention_decode_paged(params, x, kv, block_tables, positions, attn_lens,
-                           cfg, *, impl="ref", interpret=None):
+                           cfg, *, impl="ref", interpret=None, window=None,
+                           ring_pages=None):
     """One-token decode against a paged KV pool. x: (B,1,D); kv k/v pools
     (N, bs, Hkv, hd); block_tables (B, P); positions (B,) absolute position of
     the incoming token; attn_lens (B,) tokens to attend over INCLUDING the new
     one (0 marks an inactive slot — its write is dropped and its output is
-    garbage the engine ignores). Returns (out (B,1,D), new kv)."""
+    garbage the engine ignores). window/ring_pages switch sliding-window
+    layers to the ring layout (write modulo the ring, attend the last
+    `window` positions). Returns (out (B,1,D), new kv)."""
     from repro.kernels.paged_attention import paged_attention, paged_attention_ref
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     B = x.shape[0]
     pos_b1 = positions[:, None]
     if cfg.rope_mode == "mrope":
         pos_b1 = jnp.broadcast_to(pos_b1[None], (3, B, 1))
-    q, k_new, v_new = _project_qkv(params, x, pos_b1, cfg, None)
+    q, k_new, v_new = _project_qkv(params, x, pos_b1, cfg, window)
     kv = paged_write(kv, k_new[:, 0], v_new[:, 0], block_tables, positions,
-                     attn_lens > 0)
+                     attn_lens > 0, ring_pages=ring_pages)
     if impl == "kernel":
         out = paged_attention(q[:, 0], kv["k"], kv["v"], block_tables,
-                              attn_lens, interpret=interpret)
+                              attn_lens, window=window, positions=positions,
+                              ring_pages=ring_pages, interpret=interpret)
     else:
         out = paged_attention_ref(q[:, 0], kv["k"], kv["v"], block_tables,
-                                  attn_lens)
+                                  attn_lens, window=window,
+                                  positions=positions, ring_pages=ring_pages)
     out = out.reshape(B, 1, h * hd)
     return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
@@ -252,6 +263,73 @@ def attention_prefill_paged(params, x, kv, table_row, start, valid_len, cfg):
     scale = 1.0 / np.sqrt(hd)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
     mask = jnp.arange(P * bs)[None, :] <= pos[:, None]            # (C, P*bs)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(1, C, h * hd)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
+
+
+def attention_prefill_ring(params, x, kv, table_row, start, valid_len, cfg,
+                           *, window, ring_pages):
+    """Chunked prefill for ONE sequence against a RING-paged pool. x: (1,C,D)
+    — chunk starting at absolute position `start`, first `valid_len` tokens
+    real. The sequence owns only `ring_pages` blocks; position p lives at
+    `table_row[(p // bs) % ring_pages]`, offset `p % bs`.
+
+    Unlike the full-attention path (write, then gather everything back),
+    the pre-chunk ring content is gathered BEFORE the chunk's writes: on
+    wraparound the chunk overwrites pages that early queries still need, so
+    read-then-write is required for correctness. Each query t attends the
+    union of {pre-chunk ring keys} ∪ {the chunk's own K/V}, masked to its
+    window (t - window, t]. Returns (out (1,C,D), new kv)."""
+    from repro.kernels.paged_attention.ref import ring_key_positions
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    C = x.shape[1]
+    positions = (start + jnp.arange(C))[None]                     # (1, C)
+    if cfg.rope_mode == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, 1, C))
+    q, k, v = _project_qkv(params, x, positions, cfg, window)
+
+    N, bs = kv["k"].shape[0], kv["k"].shape[1]
+    R = ring_pages
+    pos = start + jnp.arange(C)
+
+    # 1) gather the ring as of position start-1 (before this chunk's writes)
+    ring_row = table_row[:R]
+    old_k = kv["k"][ring_row].reshape(1, R * bs, hkv, hd)
+    old_v = kv["v"][ring_row].reshape(1, R * bs, hkv, hd)
+    old_pos = ring_key_positions((start - 1)[None], R, bs)[0]     # (R*bs,)
+    # entries the pre-chunk ring never held: pages < 0 entirely, and the
+    # current page's offsets past (start-1) % bs (previous-lap leftovers,
+    # reconstructed as > start-1)
+    old_ok = (old_pos >= 0) & (old_pos <= start - 1)
+
+    # 2) write the chunk's K/V at their ring slots. Padding rows are
+    # dropped, and so is any position lapped by a LATER valid position in
+    # this same chunk (C can exceed the ring capacity R*bs): `.at[].set`
+    # leaves duplicate-index order undefined, so only each (slot, offset)'s
+    # newest lap may write. Skipped positions are > R*bs > window older
+    # than the chunk's last token — nothing downstream can attend them.
+    last_valid = start + valid_len - 1
+    write = (jnp.arange(C) < valid_len) & (pos > last_valid - R * bs)
+    bids = jnp.where(write, table_row[(pos // bs) % R], N)
+    offs = pos % bs
+    kv = {
+        "k": kv["k"].at[bids, offs].set(k[0], mode="drop"),
+        "v": kv["v"].at[bids, offs].set(v[0], mode="drop"),
+    }
+
+    # 3) attend: keys = pre-chunk ring ∪ the chunk itself
+    n_rep = h // hkv
+    kk = _repeat_kv(jnp.concatenate([old_k, k], axis=1), n_rep)
+    vv = _repeat_kv(jnp.concatenate([old_v, v], axis=1), n_rep)
+    kpos = jnp.concatenate([old_pos, pos])                        # (R*bs + C,)
+    kok = jnp.concatenate([old_ok, jnp.ones((C,), bool)])
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    mask = (kok[None, :]
+            & (kpos[None, :] <= pos[:, None])
+            & (kpos[None, :] > pos[:, None] - window))            # (C, K)
     s = jnp.where(mask[None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(1, C, h * hd)

@@ -179,14 +179,22 @@ def rwkv6_channel_mix(params, x, cfg, state=None):
     return (r.astype(x.dtype) * v), x[:, -1:]
 
 
-def init_rwkv6_state(cfg, batch):
+def rwkv6_state_spec(cfg):
+    """Per-sequence recurrent-state layout: name -> (shape, dtype). The
+    single source of truth for cache init AND the engine's per-slot slab
+    provider (state_providers.RecurrentSlabProvider)."""
     hd = cfg.ssm_head_dim
     H = cfg.d_model // hd
     return {
-        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
-        "prev": jnp.zeros((batch, 1, cfg.d_model), L.dtype_of(cfg)),
-        "prev_cm": jnp.zeros((batch, 1, cfg.d_model), L.dtype_of(cfg)),
+        "S": ((H, hd, hd), jnp.float32),
+        "prev": ((1, cfg.d_model), L.dtype_of(cfg)),
+        "prev_cm": ((1, cfg.d_model), L.dtype_of(cfg)),
     }
+
+
+def init_rwkv6_state(cfg, batch):
+    return {k: jnp.zeros((batch,) + shape, dt)
+            for k, (shape, dt) in rwkv6_state_spec(cfg).items()}
 
 
 # ================================================================ Mamba2 (SSD)
@@ -297,13 +305,19 @@ def mamba2_mix(params, x, cfg, state=None):
     return out, {"S": Sf, "conv": conv_carry}
 
 
-def init_mamba2_state(cfg, batch):
+def mamba2_state_spec(cfg):
+    """Per-sequence recurrent-state layout: name -> (shape, dtype)."""
     d_inner = 2 * cfg.d_model
     hd = cfg.ssm_head_dim
     H = d_inner // hd
     ds = cfg.ssm_state_dim
     conv_dim = d_inner + 2 * ds
     return {
-        "S": jnp.zeros((batch, H, hd, ds), jnp.float32),
-        "conv": jnp.zeros((batch, 3, conv_dim), L.dtype_of(cfg)),
+        "S": ((H, hd, ds), jnp.float32),
+        "conv": ((3, conv_dim), L.dtype_of(cfg)),
     }
+
+
+def init_mamba2_state(cfg, batch):
+    return {k: jnp.zeros((batch,) + shape, dt)
+            for k, (shape, dt) in mamba2_state_spec(cfg).items()}

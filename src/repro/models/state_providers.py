@@ -1,0 +1,252 @@
+"""Per-layer-kind sequence-state providers for the serving engine.
+
+The paper's concurrency analysis (§3, §5) ties inference parallelism to each
+operator's *state*: attention carries O(S) KV, recurrent layers carry O(1)
+state, and real networks mix both. The engine therefore treats sequence
+state as a pluggable policy layer — one provider per layer *state kind* —
+instead of a single full-attention KV-cache special case:
+
+  state kind   layers                         provider
+  ----------   ------                         --------
+  full         attn/moe_attn (full), global,  PagedKVProvider — paged block
+               shared_attn                    pool, prefix caching, O(S) blocks
+  ring         attn/moe_attn (sliding),       RingKVProvider — fixed
+               local                          ceil(window/bs)+1 blocks per
+                                              sequence, positions written
+                                              modulo the ring
+  rwkv         rwkv time/channel mix          RecurrentSlabProvider — per-slot
+  mamba        mamba2                         O(1) state arrays, no blocks
+
+The provider protocol splits along the host/device boundary:
+
+  * device side  — ``init_layer_state`` (build one layer's pool/slab) and
+    ``defrag_remap`` (apply a block-compaction permutation; identity for
+    slabs). The jit-traced verbs — write / read-for-decode /
+    read-for-prefill — are static dispatches in ``models.transformer`` /
+    ``models.attention`` / ``models.ssm`` keyed by the same kind list, so
+    the compiled steps never branch at runtime.
+  * host side    — ``blocks_needed`` (per-sequence block cost the scheduler
+    charges; the block table is shared by every layer of a sequence, so the
+    per-sequence reservation is the MAX over kinds), ``state_bytes_per_slot``
+    (for capacity planning / benchmarks), and ``supports_prefix_caching``
+    (block aliasing is only sound for full-attention KV, whose content is a
+    pure function of the token prefix).
+
+``layer_kinds`` / ``superblock_layout`` live here (not in transformer.py) so
+both the model dispatchers and the engine derive the SAME static kind list
+from a ModelConfig without an import cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+# ----------------------------------------------------------- layer kind lists
+def superblock_layout(cfg: ModelConfig):
+    """Returns (n_superblocks, layers_per_superblock)."""
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_ssm_per_attn + 1
+        return cfg.num_layers // per, per
+    if cfg.attention_type == "local_global":
+        per = cfg.local_global_ratio + 1
+        return cfg.num_layers // per, per
+    return cfg.num_layers, 1
+
+
+def layer_kinds(cfg: ModelConfig):
+    """Static list of layer kinds within one superblock."""
+    if cfg.family == "hybrid":
+        return ["mamba"] * cfg.hybrid_ssm_per_attn + ["shared_attn"]
+    if cfg.attention_type == "local_global":
+        return ["local"] * cfg.local_global_ratio + ["global"]
+    if cfg.family == "ssm":
+        return ["rwkv"]
+    if cfg.num_experts:
+        return ["moe_attn"]
+    return ["attn"]
+
+
+def state_kind(layer_kind: str, cfg: ModelConfig) -> str:
+    """Map a layer kind to its sequence-state kind."""
+    if layer_kind in ("global", "shared_attn"):
+        return "full"
+    if layer_kind == "local":
+        return "ring"
+    if layer_kind in ("attn", "moe_attn"):
+        return "ring" if cfg.attention_type == "sliding" else "full"
+    if layer_kind == "rwkv":
+        return "rwkv"
+    if layer_kind == "mamba":
+        return "mamba"
+    raise ValueError(f"unknown layer kind {layer_kind!r}")
+
+
+def state_kinds(cfg: ModelConfig):
+    """Per-layer state kinds within one superblock (static)."""
+    return [state_kind(k, cfg) for k in layer_kinds(cfg)]
+
+
+def ring_pages(window: int, block_size: int) -> int:
+    """Ring length in pages: ceil(window/bs) intact pages always cover the
+    last `window` positions, +1 for the page currently being overwritten."""
+    return -(-window // block_size) + 1
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ------------------------------------------------------------------ providers
+@dataclass(frozen=True)
+class _PagedPoolProvider:
+    """Shared machinery of the block-pooled KV providers: pool tensor
+    layout, per-slot KV bytes, and the axis-1 (block axis, after the n_sb
+    stack) defrag gather. Subclasses set the block-cost policy."""
+    cfg: ModelConfig
+    num_blocks: int
+    block_size: int
+    max_blocks_per_seq: Optional[int] = None
+
+    def init_layer_state(self):
+        hkv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
+        dt = L.dtype_of(self.cfg)
+        return {
+            "k": jnp.zeros((self.num_blocks, self.block_size, hkv, hd), dt),
+            "v": jnp.zeros((self.num_blocks, self.block_size, hkv, hd), dt),
+        }
+
+    def state_bytes_per_slot(self, total_tokens: int) -> int:
+        hkv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
+        item = np.dtype(L.dtype_of(self.cfg)).itemsize
+        return self.blocks_needed(total_tokens) * self.block_size * 2 * hkv * hd * item
+
+    def defrag_remap(self, state, perm):
+        """state leaves: (n_sb, N, bs, Hkv, hd); perm: new[i] = old[perm[i]]."""
+        return jax.tree.map(lambda a: jnp.take(a, perm, axis=1), state)
+
+
+@dataclass(frozen=True)
+class PagedKVProvider(_PagedPoolProvider):
+    """Full-attention paged KV: O(S) blocks per sequence, prefix caching."""
+
+    kind = "full"
+    supports_prefix_caching = True
+
+    def blocks_needed(self, total_tokens: int) -> int:
+        return _ceil_div(total_tokens, self.block_size)
+
+    def max_tokens(self) -> Optional[int]:
+        """Context bound imposed by the block-table width (None = unbounded)."""
+        if self.max_blocks_per_seq is None:
+            return None
+        return self.max_blocks_per_seq * self.block_size
+
+
+@dataclass(frozen=True)
+class RingKVProvider(_PagedPoolProvider):
+    """Sliding-window paged KV: a fixed ring of ceil(window/bs)+1 blocks per
+    sequence; token at position p lives in table[(p // bs) % ring] at offset
+    p % bs, so long generations stop consuming new blocks."""
+    window: int = 0
+
+    kind = "ring"
+    supports_prefix_caching = False  # ring content depends on wrap position
+
+    @property
+    def ring_pages(self) -> int:
+        return ring_pages(self.window, self.block_size)
+
+    def blocks_needed(self, total_tokens: int) -> int:
+        return min(_ceil_div(total_tokens, self.block_size), self.ring_pages)
+
+    def max_tokens(self) -> Optional[int]:
+        return None  # the ring wraps: any length fits in ring_pages blocks
+
+
+@dataclass(frozen=True)
+class RecurrentSlabProvider:
+    """O(1) recurrent state: one slab row per engine slot, no block
+    accounting. Rows are zeroed when a new request takes the slot and
+    updates are masked for inactive slots, so a mid-prefill neighbour is
+    never corrupted by the batched decode step."""
+    cfg: ModelConfig
+    max_slots: int
+    kind: str                         # "rwkv" | "mamba"
+
+    supports_prefix_caching = False
+
+    def _spec(self):
+        if self.kind == "rwkv":
+            return S.rwkv6_state_spec(self.cfg)
+        if self.kind == "mamba":
+            return S.mamba2_state_spec(self.cfg)
+        raise ValueError(self.kind)
+
+    def init_layer_state(self):
+        return {k: jnp.zeros((self.max_slots,) + shape, dt)
+                for k, (shape, dt) in self._spec().items()}
+
+    def blocks_needed(self, total_tokens: int) -> int:
+        return 0
+
+    def max_tokens(self) -> Optional[int]:
+        return None
+
+    def state_bytes_per_slot(self, total_tokens: int) -> int:
+        return sum(int(np.prod(shape)) * np.dtype(dt).itemsize
+                   for shape, dt in self._spec().values())
+
+    def defrag_remap(self, state, perm):
+        return state  # slot-indexed, block moves don't touch it
+
+
+# ----------------------------------------------------------------- assembly
+def provider_for(skind: str, cfg: ModelConfig, *, num_blocks: int,
+                 block_size: int, max_slots: int,
+                 max_blocks_per_seq: Optional[int] = None):
+    if skind == "full":
+        return PagedKVProvider(cfg, num_blocks, block_size, max_blocks_per_seq)
+    if skind == "ring":
+        return RingKVProvider(cfg, num_blocks, block_size, max_blocks_per_seq,
+                              window=cfg.window_size)
+    if skind in ("rwkv", "mamba"):
+        return RecurrentSlabProvider(cfg, max_slots, skind)
+    raise ValueError(f"unknown state kind {skind!r}")
+
+
+def providers_for(cfg: ModelConfig, *, num_blocks: int, block_size: int,
+                  max_slots: int, max_blocks_per_seq: Optional[int] = None):
+    """One provider per layer of a superblock, aligned with layer_kinds(cfg).
+    Layers of the same kind share a (frozen, equal) provider instance."""
+    cache = {}
+    out = []
+    for sk in state_kinds(cfg):
+        if sk not in cache:
+            cache[sk] = provider_for(
+                sk, cfg, num_blocks=num_blocks, block_size=block_size,
+                max_slots=max_slots, max_blocks_per_seq=max_blocks_per_seq)
+        out.append(cache[sk])
+    return out
+
+
+def seq_blocks_needed(providers, total_tokens: int) -> int:
+    """Blocks to reserve for one sequence of `total_tokens`. The block table
+    is shared across layers, so the reservation is the max over kinds — a
+    full-attention layer dominates a ring layer; recurrent layers are free."""
+    return max((p.blocks_needed(total_tokens) for p in providers), default=0)
+
+
+def state_memory_per_slot(cfg: ModelConfig, providers, total_tokens: int) -> int:
+    """Whole-model sequence-state bytes for one busy slot at `total_tokens`
+    context (all superblocks)."""
+    n_sb, _ = superblock_layout(cfg)
+    return n_sb * sum(p.state_bytes_per_slot(total_tokens) for p in providers)

@@ -32,32 +32,12 @@ from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
+from repro.models import state_providers as SP
 
-
-# ------------------------------------------------------------- superblock def
-def superblock_layout(cfg: ModelConfig):
-    """Returns (n_superblocks, layers_per_superblock)."""
-    if cfg.family == "hybrid":
-        per = cfg.hybrid_ssm_per_attn + 1
-        return cfg.num_layers // per, per
-    if cfg.attention_type == "local_global":
-        per = cfg.local_global_ratio + 1
-        return cfg.num_layers // per, per
-    return cfg.num_layers, 1
-
-
-def _layer_kinds(cfg: ModelConfig):
-    """Static list of layer kinds within one superblock."""
-    _, per = superblock_layout(cfg)
-    if cfg.family == "hybrid":
-        return ["mamba"] * cfg.hybrid_ssm_per_attn + ["shared_attn"]
-    if cfg.attention_type == "local_global":
-        return ["local"] * cfg.local_global_ratio + ["global"]
-    if cfg.family == "ssm":
-        return ["rwkv"]
-    if cfg.num_experts:
-        return ["moe_attn"]
-    return ["attn"]
+# superblock layout / kind lists live in state_providers so the engine's
+# host-side accounting derives the SAME static structure (no import cycle)
+superblock_layout = SP.superblock_layout
+_layer_kinds = SP.layer_kinds
 
 
 # ------------------------------------------------------------------ param init
@@ -355,53 +335,82 @@ def prefill_step(cfg: ModelConfig, params, state, inputs):
 
 
 # -------------------------------------------------------------- paged decode
-def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int):
-    """Per-superblock paged KV pools (n_sb, num_blocks, block_size, Hkv, hd).
-    All layers share ONE block table per sequence; each layer owns its pool
-    storage. Only full-attention families page (sliding windows keep ring
-    caches; ssm states are O(1) and need no paging)."""
+def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     max_slots: int = None):
+    """Per-superblock, per-layer sequence state, built by the layer's state
+    provider (see models.state_providers):
+
+      full / ring layers — paged KV pools (n_sb, num_blocks, bs, Hkv, hd);
+        all layers share ONE block table per sequence, each layer owns its
+        pool storage. Ring layers reuse the table's first ring_pages entries
+        modulo the ring.
+      rwkv / mamba layers — per-slot recurrent slabs (n_sb, max_slots, ...);
+        no block accounting at all.
+
+    `max_slots` is required whenever the config has recurrent layers."""
     kinds = _layer_kinds(cfg)
-    if not all(k in _ATTN_KINDS for k in kinds):
-        raise NotImplementedError(f"paged decode needs attention layers, got {kinds}")
-    if cfg.attention_type != "full":
-        raise NotImplementedError("paged decode supports attention_type='full'")
+    skinds = SP.state_kinds(cfg)
+    if any(k in ("rwkv", "mamba") for k in skinds) and max_slots is None:
+        raise ValueError("recurrent layers need max_slots for their state slab")
     n_sb, _ = superblock_layout(cfg)
-    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    dt = L.dtype_of(cfg)
-    one = {f"l{i}": {
-        "k": jnp.zeros((num_blocks, block_size, hkv, hd), dt),
-        "v": jnp.zeros((num_blocks, block_size, hkv, hd), dt),
-    } for i in range(len(kinds))}
+    providers = SP.providers_for(cfg, num_blocks=num_blocks,
+                                 block_size=block_size,
+                                 max_slots=max_slots or 0)
+    one = {f"l{i}": p.init_layer_state() for i, p in enumerate(providers)}
     return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape), one)
+
+
+def _attn_block(kind, p, lp, h_in, cfg, attn_out):
+    """Residual + MLP/MoE tail shared by every attention-layer dispatch."""
+    x = h_in + attn_out
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == "moe_attn":
+        return x + M.moe_apply(lp["moe"], h, cfg)
+    return x + L.swiglu(p["mlp"], h)
 
 
 def paged_decode_step(cfg: ModelConfig, params, pool, inputs, block_tables,
                       positions, attn_lens, *, impl="ref", interpret=None):
-    """One-token decode for a continuous batch of slots. inputs: {"token":
-    (B,)}; block_tables: (B, P); positions: (B,) absolute position of each
-    incoming token; attn_lens: (B,) tokens to attend over including the new
-    one (0 = inactive slot). Returns (logits (B,V), new pool)."""
+    """One-token decode for a continuous batch of slots, dispatching each
+    layer to its state kind. inputs: {"token": (B,)}; block_tables: (B, P);
+    positions: (B,) absolute position of each incoming token; attn_lens:
+    (B,) tokens to attend over including the new one (0 = inactive slot).
+    Recurrent slabs are per-slot (B == max_slots) and their updates are
+    masked for inactive slots, so slots mid-prefill are never corrupted by
+    the batched decode. Returns (logits (B,V), new pool)."""
     x = _embed_tokens(cfg, params, inputs["token"][:, None])
     kinds = _layer_kinds(cfg)
+    skinds = SP.state_kinds(cfg)
     shared = params.get("shared_attn")
+    active = attn_lens > 0
 
     def scan_body(x, sb):
         sb_params, sb_pool = sb
         new_pool = {}
-        for i, kind in enumerate(kinds):
-            p = shared if kind == "shared_attn" else sb_params[f"l{i}"]
+        for i, (kind, skind) in enumerate(zip(kinds, skinds)):
             lp = sb_params[f"l{i}"]
-            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-            y, kv = A.attention_decode_paged(
-                p["attn"], h, sb_pool[f"l{i}"], block_tables, positions,
-                attn_lens, cfg, impl=impl, interpret=interpret)
-            x = x + y
-            h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-            if kind == "moe_attn":
-                x = x + M.moe_apply(lp["moe"], h, cfg)
+            st = sb_pool[f"l{i}"]
+            if skind in ("full", "ring"):
+                p = shared if kind == "shared_attn" else lp
+                window = cfg.window_size if skind == "ring" else None
+                rp = (SP.ring_pages(window, st["k"].shape[1])
+                      if skind == "ring" else None)
+                h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+                y, kv = A.attention_decode_paged(
+                    p["attn"], h, st, block_tables, positions, attn_lens,
+                    cfg, impl=impl, interpret=interpret, window=window,
+                    ring_pages=rp)
+                x = _attn_block(kind, p, lp, x, cfg, y)
+                new_pool[f"l{i}"] = kv
             else:
-                x = x + L.swiglu(p["mlp"], h)
-            new_pool[f"l{i}"] = kv
+                x1, new_st = _apply_layer_decode(kind, lp, st, x,
+                                                 jnp.int32(0), cfg, shared)
+                new_st = jax.tree.map(
+                    lambda n, o: jnp.where(
+                        active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                    new_st, st)
+                x = x1
+                new_pool[f"l{i}"] = new_st
         return x, new_pool
 
     x, new_pools = jax.lax.scan(scan_body, x, (params["blocks"], pool))
@@ -410,31 +419,62 @@ def paged_decode_step(cfg: ModelConfig, params, pool, inputs, block_tables,
     return lg, new_pools
 
 
+def _recurrent_prefill_layer(kind, lp, slab, x, valid_len, slot, cfg, shared):
+    """Chunked prefill of ONE sequence through a recurrent layer: a token
+    scan of the decode path (recurrent state has no one-shot prefill), with
+    state updates masked past `valid_len` so the slab ends at exactly the
+    last real token. slab leaves: (max_slots, ...); x: (1, C, D).
+    Returns (y (1,C,D), new slab)."""
+    st0 = jax.tree.map(lambda a: a[slot][None], slab)
+
+    def body(st, t):
+        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)        # (1,1,D)
+        yt, new = _apply_layer_decode(kind, lp, st, xt, t, cfg, shared)
+        keep = t < valid_len
+        st = jax.tree.map(lambda n, o: jnp.where(keep, n, o), new, st)
+        return st, yt[:, 0]
+
+    stf, ys = jax.lax.scan(body, st0, jnp.arange(x.shape[1]))
+    y = ys.swapaxes(0, 1)                                         # (1, C, D)
+    slab = jax.tree.map(lambda a, s: a.at[slot].set(s[0]), slab, stf)
+    return y, slab
+
+
 def paged_prefill_step(cfg: ModelConfig, params, pool, tokens, table_row,
-                       start, valid_len):
-    """Chunked prefill of ONE sequence into the paged pool. tokens: (1, C)
-    chunk starting at absolute position `start`, first `valid_len` real.
-    Returns (logits (1,V) of the chunk's last valid token, new pool)."""
+                       start, valid_len, slot):
+    """Chunked prefill of ONE sequence into its per-kind state. tokens:
+    (1, C) chunk starting at absolute position `start`, first `valid_len`
+    real. `slot` locates the sequence's recurrent slab rows; paged layers
+    use `table_row`. Returns (logits (1,V) of the chunk's last valid token,
+    new pool)."""
     x = _embed_tokens(cfg, params, tokens)
     kinds = _layer_kinds(cfg)
+    skinds = SP.state_kinds(cfg)
     shared = params.get("shared_attn")
 
     def scan_body(x, sb):
         sb_params, sb_pool = sb
         new_pool = {}
-        for i, kind in enumerate(kinds):
-            p = shared if kind == "shared_attn" else sb_params[f"l{i}"]
+        for i, (kind, skind) in enumerate(zip(kinds, skinds)):
             lp = sb_params[f"l{i}"]
-            h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
-            y, kv = A.attention_prefill_paged(
-                p["attn"], h, sb_pool[f"l{i}"], table_row, start, valid_len, cfg)
-            x = x + y
-            h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-            if kind == "moe_attn":
-                x = x + M.moe_apply(lp["moe"], h, cfg)
+            st = sb_pool[f"l{i}"]
+            if skind in ("full", "ring"):
+                p = shared if kind == "shared_attn" else lp
+                h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+                if skind == "ring":
+                    rp = SP.ring_pages(cfg.window_size, st["k"].shape[1])
+                    y, kv = A.attention_prefill_ring(
+                        p["attn"], h, st, table_row, start, valid_len, cfg,
+                        window=cfg.window_size, ring_pages=rp)
+                else:
+                    y, kv = A.attention_prefill_paged(
+                        p["attn"], h, st, table_row, start, valid_len, cfg)
+                x = _attn_block(kind, p, lp, x, cfg, y)
+                new_pool[f"l{i}"] = kv
             else:
-                x = x + L.swiglu(p["mlp"], h)
-            new_pool[f"l{i}"] = kv
+                x, new_st = _recurrent_prefill_layer(
+                    kind, lp, st, x, valid_len, slot, cfg, shared)
+                new_pool[f"l{i}"] = new_st
         return x, new_pool
 
     x, new_pools = jax.lax.scan(scan_body, x, (params["blocks"], pool))

@@ -1,7 +1,16 @@
 """Continuous-batching serving engine front-end.
 
+Sequence state is pluggable per layer kind (models.state_providers): full
+attention pages O(S) KV blocks, sliding-window layers keep a fixed ring of
+``ceil(window/block_size)+1`` blocks written modulo the ring, and rwkv6 /
+mamba2 layers keep O(1) per-slot state slabs — so the engine serves the
+full, sliding, ssm, AND hybrid families through one scheduler and one
+block-table layout. Admission charges the per-kind block cost (max over
+kinds; recurrent layers are free) and prefix caching stays on exactly for
+the all-full-attention configs where block aliasing is sound.
+
 Wires the host-side scheduler + block-pool bookkeeping to two jitted device
-functions over the paged KV pool:
+functions over the per-kind sequence state:
 
   * ``paged_prefill_step`` — one prompt chunk of one sequence (chunked
     prefill; the chunk length is static so there is exactly one compilation).
@@ -45,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import parallelism as par
+from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving.engine.paged_cache import BlockPool
 from repro.serving.engine.scheduler import DECODING, FINISHED, Request, Scheduler
@@ -64,9 +74,10 @@ class EngineConfig:
 
 
 def _build_step_fns(cfg, e: EngineConfig, plan):
-    """The two jitted device functions. Cached per (cfg, EngineConfig) for
+    """The jitted device functions. Cached per (cfg, EngineConfig) for
     the plan-less path so repeated Engine construction re-uses the compiled
     steps (mirrors serve._cached_decode_step)."""
+    skinds = SP.state_kinds(cfg)
 
     def in_plan(fn):
         @functools.wraps(fn)
@@ -90,19 +101,33 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     @in_plan
-    def prefill_fn(params, pool, tokens, table_row, start, valid):
+    def prefill_fn(params, pool, tokens, table_row, start, valid, slot):
         logits, pool = T.paged_prefill_step(
-            cfg, params, pool, tokens, table_row, start, valid)
+            cfg, params, pool, tokens, table_row, start, valid, slot)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, logits, pool
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def copy_block_fn(pool, src, dst):
         # copy-on-write: duplicate one KV block (all layers) so a request
-        # whose prompt is fully cached can re-run its last token privately
+        # whose prompt is fully cached can re-run its last token privately.
+        # Only reached with prefix caching on, i.e. every leaf is a paged
+        # pool indexed (n_sb, block, ...).
         return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
 
-    return decode_fn, prefill_fn, copy_block_fn
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def reset_slot_fn(pool, slot):
+        # zero one slot's recurrent slab rows across all layers: a new
+        # occupant must not see the previous request's final state
+        out = {}
+        for i, sk in enumerate(skinds):
+            st = pool[f"l{i}"]
+            if sk in ("rwkv", "mamba"):
+                st = jax.tree.map(lambda a: a.at[:, slot].set(0), st)
+            out[f"l{i}"] = st
+        return out
+
+    return decode_fn, prefill_fn, copy_block_fn, reset_slot_fn
 
 
 def _step_fn_key(e: EngineConfig) -> EngineConfig:
@@ -127,14 +152,37 @@ class Engine:
         self.params = params
         e = self.ecfg
 
-        self.pool_state = T.init_paged_state(cfg, e.num_blocks, e.block_size)
+        # one state provider per superblock layer (models.state_providers):
+        # paged full-attention KV, ring-paged sliding-window KV, or per-slot
+        # recurrent slabs. The providers drive device-state init, per-kind
+        # block costs for admission, and defrag remapping.
+        self.providers = SP.providers_for(
+            cfg, num_blocks=e.num_blocks, block_size=e.block_size,
+            max_slots=e.max_slots, max_blocks_per_seq=e.max_blocks_per_seq)
+        self.state_kinds = [p.kind for p in self.providers]
+        self._has_recurrent = any(k in ("rwkv", "mamba")
+                                  for k in self.state_kinds)
+        for p in self.providers:
+            if p.kind == "ring" and p.ring_pages > e.max_blocks_per_seq:
+                raise ValueError(
+                    f"ring needs {p.ring_pages} blocks (window "
+                    f"{p.window} @ block_size {e.block_size}) > "
+                    f"max_blocks_per_seq {e.max_blocks_per_seq}")
+        # block aliasing is only sound when every layer's state is a pure
+        # function of the token prefix — i.e. all-full-attention configs
+        self.prefix_caching = (e.prefix_caching and all(
+            p.supports_prefix_caching for p in self.providers))
+
+        self.pool_state = T.init_paged_state(cfg, e.num_blocks, e.block_size,
+                                             max_slots=e.max_slots)
         self.block_pool = BlockPool(e.num_blocks, e.block_size)
         self.scheduler = Scheduler(
             self.block_pool, max_slots=e.max_slots,
             max_blocks_per_seq=e.max_blocks_per_seq,
             prefill_chunk=e.prefill_chunk,
             prefills_per_step=e.prefills_per_step,
-            prefix_caching=e.prefix_caching)
+            prefix_caching=self.prefix_caching,
+            block_cost=self.blocks_needed)
 
         # device-resident slot state (touched from the host only at request
         # lifecycle events; the decode loop never reads it back)
@@ -150,21 +198,46 @@ class Engine:
                       "prefix_hit_tokens": 0, "cow_copies": 0}
 
         if plan is None:
-            self._decode, self._prefill, self._copy_block = \
+            self._decode, self._prefill, self._copy_block, self._reset_slot = \
                 _cached_step_fns(cfg, _step_fn_key(self.ecfg))
         else:
-            self._decode, self._prefill, self._copy_block = \
+            self._decode, self._prefill, self._copy_block, self._reset_slot = \
                 _build_step_fns(cfg, self.ecfg, plan)
 
     # ----------------------------------------------------------------- API
+    def blocks_needed(self, total_tokens: int) -> int:
+        """Blocks one sequence of `total_tokens` reserves: the max over the
+        per-kind provider costs (the block table is shared across layers)."""
+        return SP.seq_blocks_needed(self.providers, total_tokens)
+
     def add_request(self, prompt, max_new: int, *, temperature: float = 0.0,
                     key=None, stop_token: Optional[int] = None) -> int:
-        """Queue a request; returns its id. `prompt`: 1-D int tokens."""
+        """Queue a request; returns its id. `prompt`: 1-D int tokens.
+
+        Validates up front that prompt + generation budget fits both the
+        per-sequence block table and the whole pool, so infeasible requests
+        fail here with the offending numbers instead of deep inside the
+        scheduler."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] < 1:
             raise ValueError("prompt must contain at least one token")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
+        e = self.ecfg
+        total = prompt.shape[0] + max_new
+        need = self.blocks_needed(total)
+        if need > e.max_blocks_per_seq:
+            raise ValueError(
+                f"request infeasible: prompt_len {prompt.shape[0]} + max_new "
+                f"{max_new} = {total} tokens needs {need} blocks > "
+                f"max_blocks_per_seq {e.max_blocks_per_seq} "
+                f"(= {e.max_blocks_per_seq * e.block_size} tokens at "
+                f"block_size {e.block_size})")
+        if need > e.num_blocks:
+            raise ValueError(
+                f"request infeasible: prompt_len {prompt.shape[0]} + max_new "
+                f"{max_new} = {total} tokens needs {need} blocks > pool "
+                f"budget num_blocks {e.num_blocks}")
         if temperature > 0.0 and key is None:
             key = jax.random.PRNGKey(self._next_rid)
         rid = self._next_rid
@@ -189,6 +262,11 @@ class Engine:
             padded[:len(row)] = row
             self.tables = self.tables.at[req.slot].set(jnp.asarray(padded))
             self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
+            if self._has_recurrent:
+                # the slot's recurrent slab rows still hold the previous
+                # occupant's final state — zero them for the newcomer
+                self.pool_state = self._reset_slot(
+                    self.pool_state, jnp.int32(req.slot))
             self.stats["prefix_hit_tokens"] += req.prefilled
             if req.cow_src is not None:
                 # whole prompt cached: copy the last matched block into the
@@ -204,7 +282,8 @@ class Engine:
             chunk[0, :valid] = req.prompt[start:start + valid]
             greedy, logits, self.pool_state = self._prefill(
                 self.params, self.pool_state, jnp.asarray(chunk),
-                self.tables[req.slot], jnp.int32(start), jnp.int32(valid))
+                self.tables[req.slot], jnp.int32(start), jnp.int32(valid),
+                jnp.int32(req.slot))
             req.prefilled += valid
             self.scheduler.register_prefilled(req)
             self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
@@ -269,12 +348,16 @@ class Engine:
         """Compact used KV blocks to the front of the pool and rewrite every
         live block table (host bookkeeping + one device gather per pool).
         Shared (prefix-cached) blocks move once and every owner's table
-        follows; cached-free blocks keep their content. Returns the applied
-        permutation `src` (``new_pool[i] = old_pool[src[i]]``)."""
+        follows; cached-free blocks keep their content. Each layer's state
+        provider applies the permutation its own way (paged pools gather on
+        the block axis; recurrent slabs are slot-indexed and untouched).
+        Returns the applied permutation `src`
+        (``new_pool[i] = old_pool[src[i]]``)."""
         src = self.block_pool.defragment()
         src_j = jnp.asarray(src)
-        self.pool_state = jax.tree.map(
-            lambda a: jnp.take(a, src_j, axis=1), self.pool_state)
+        self.pool_state = {
+            f"l{i}": p.defrag_remap(self.pool_state[f"l{i}"], src_j)
+            for i, p in enumerate(self.providers)}
         tables = np.zeros(self.tables.shape, np.int32)
         for req in self.scheduler.running.values():
             row = self.block_pool.table(req.rid)

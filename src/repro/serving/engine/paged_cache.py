@@ -3,9 +3,14 @@ block tables, per-block refcounts, and a prefix index for cross-request KV
 reuse (vLLM-style PagedAttention memory management with prefix caching).
 
 `BlockPool` is pure host-side accounting — the device-side pool tensors live
-in the Engine (`models.transformer.init_paged_state`). A block may be
-referenced by any number of sequence tables (shared read-only prompt
-prefixes); the refcount tracks exactly how many. Blocks whose refcount drops
+in the Engine (`models.transformer.init_paged_state`). The pool is
+state-kind agnostic: how many blocks a sequence charges is the caller's
+policy (the scheduler's provider-aware `block_cost` — full attention pages
+O(S), sliding-window rings cap at ceil(window/bs)+1, recurrent sequences
+own zero blocks, `alloc(rid, 0)` just registers the owner so `table` /
+`free_seq` stay uniform). A block may be referenced by any number of
+sequence tables (shared read-only prompt prefixes); the refcount tracks
+exactly how many. Blocks whose refcount drops
 to zero but that are registered in the prefix index are NOT lost: they go on
 the free list in least-recently-used order with their device content intact,
 so a later request with the same prompt prefix can revive them via
@@ -111,7 +116,10 @@ class BlockPool:
     # ----------------------------------------------------------- mutation
     def alloc(self, rid, n_blocks: int) -> list:
         """Append `n_blocks` fresh private blocks to sequence `rid` (creating
-        it). Popping a cached-free block evicts its prefix-index entry."""
+        it). `n_blocks == 0` is valid and registers `rid` with an empty
+        table (recurrent-only sequences own no blocks but still free
+        uniformly). Popping a cached-free block evicts its prefix-index
+        entry."""
         if n_blocks > len(self._free):
             raise BlockPoolError(
                 f"need {n_blocks} blocks, only {len(self._free)} free")

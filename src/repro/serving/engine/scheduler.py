@@ -1,6 +1,12 @@
 """Continuous-batching scheduler: request queue, block-budget admission with
 prefix-cache matching, chunked prefill interleaved with decode.
 
+Block budgets are provider-aware (`block_cost`, injected by the Engine from
+models.state_providers): sliding-window sequences reserve at most the ring
+length, recurrent (ssm) sequences reserve zero blocks and are admitted on
+slot availability alone, and hybrid configs charge the max over their layer
+kinds since every layer shares one block table.
+
 Policy (one engine `step()`):
   1. ADMIT  — pop waiting requests while a slot AND their block reservation
               are available. With prefix caching, the incoming prompt's
@@ -71,20 +77,26 @@ class Request:
 class Scheduler:
     def __init__(self, pool: BlockPool, *, max_slots: int,
                  max_blocks_per_seq: int, prefill_chunk: int,
-                 prefills_per_step: int = 1, prefix_caching: bool = True):
+                 prefills_per_step: int = 1, prefix_caching: bool = True,
+                 block_cost=None):
         self.pool = pool
         self.max_slots = max_slots
         self.max_blocks_per_seq = max_blocks_per_seq
         self.prefill_chunk = prefill_chunk
         self.prefills_per_step = prefills_per_step
         self.prefix_caching = prefix_caching
+        # per-sequence block cost: total tokens -> blocks to reserve. The
+        # engine injects the provider-aware cost (max over layer state
+        # kinds: full = ceil(total/bs), ring = capped at the ring length,
+        # recurrent = 0); the default is the uniform full-attention cost.
+        self.block_cost = block_cost or pool.blocks_for
         self.waiting: deque = deque()
         self.running: dict = {}         # rid -> Request (PREFILLING|DECODING)
         self._free_slots = list(range(max_slots - 1, -1, -1))
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
-        need = self.pool.blocks_for(req.prompt_len + req.max_new)
+        need = self.block_cost(req.prompt_len + req.max_new)
         if need > self.max_blocks_per_seq:
             raise ValueError(
                 f"request {req.rid}: needs {need} blocks > table width "
@@ -98,13 +110,15 @@ class Scheduler:
     def admit(self) -> list:
         """Admission by free-block budget: reserve blocks for the whole
         sequence (prompt + max_new) up front — with no preemption this
-        guarantees an admitted request always runs to completion. Cached
-        prefix blocks are aliased instead of allocated, so the budget only
-        charges for the uncached tail."""
+        guarantees an admitted request always runs to completion. The
+        reservation is the provider-aware `block_cost` (ring layers cap at
+        the ring length, recurrent layers reserve nothing). Cached prefix
+        blocks are aliased instead of allocated, so the budget only charges
+        for the uncached tail."""
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
-            need = self.pool.blocks_for(req.prompt_len + req.max_new)
+            need = self.block_cost(req.prompt_len + req.max_new)
             matched = (self.pool.match_prefix(req.block_hashes)
                        if self.prefix_caching else [])
             cow = None

@@ -2,7 +2,11 @@
 
 `make_serve_step` builds the jitted one-token step used by the decode dry-run
 shapes (decode_32k, long_500k): ONE new token against a cache of seq_len.
-`generate` drives a full sampling loop (used by examples/serve_demo.py).
+`generate` drives a full sampling loop (used by examples/serve_demo.py) and
+is the bit-exactness oracle for the continuous-batching engine across ALL
+families (full / sliding / ssm / hybrid — per-layer state providers).
+`engine_generate` routes the same request shape through the Engine in one
+call for demos, benchmarks, and equality tests.
 """
 from __future__ import annotations
 
@@ -100,3 +104,18 @@ def generate(cfg, params, prompt_tokens, max_new, *, key=None, temperature=0.0,
         out.append(tok)
         logits, cache = step(params, cache, tok, jnp.int32(S0 + j))
     return jnp.stack(out, axis=1)
+
+
+def engine_generate(cfg, params, prompts, max_news, *, engine_cfg=None,
+                    plan=None):
+    """Greedy generation for a batch of VARIABLE-length prompts through the
+    continuous-batching Engine (any family the state providers cover: full,
+    sliding, ssm, hybrid). `prompts`: list of 1-D int token arrays;
+    `max_news`: per-request generation budgets. Returns a list of np arrays
+    in request order — greedy outputs are bit-identical to per-request
+    `generate` calls."""
+    from repro.serving.engine import Engine, EngineConfig
+    eng = Engine(cfg, params, engine_cfg or EngineConfig(), plan=plan)
+    rids = [eng.add_request(p, int(m)) for p, m in zip(prompts, max_news)]
+    outs = eng.drain()
+    return [outs[r] for r in rids]
