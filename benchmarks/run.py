@@ -4,7 +4,9 @@ Prints `name,us_per_call,derived` CSV rows.
 `--serving-workload mixed|shared|both` is passed through to
 benchmarks.serving_bench (shared = the prefix-caching comparison);
 `--serving-family full|sliding|ssm|hybrid|all` adds the per-family
-state-provider sweep."""
+state-provider sweep; `--serving-trace-out PREFIX` writes each workload's
+request-lifecycle event log to PREFIX.<workload>.jsonl (replayable via
+repro.serving.telemetry.replay_jsonl)."""
 import argparse
 import sys
 import traceback
@@ -35,12 +37,15 @@ def main(argv=None) -> None:
                     choices=("full", "sliding", "ssm", "hybrid", "all"),
                     default=None,
                     help="per-family state-provider sweep for serving_bench")
+    ap.add_argument("--serving-trace-out", default=None, metavar="PREFIX",
+                    help="JSONL request-trace prefix for serving_bench")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
     for mod_name in MODULES:
         kwargs = ({"workload": args.serving_workload,
-                   "config_family": args.serving_family}
+                   "config_family": args.serving_family,
+                   "trace_out": args.serving_trace_out}
                   if mod_name == "benchmarks.serving_bench" else {})
         try:
             mod = __import__(mod_name, fromlist=["main"])

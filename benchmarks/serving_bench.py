@@ -27,10 +27,20 @@ O(1) slabs for ssm, the mix for hybrid), and peak block-pool utilization.
 
 Rows: tokens/s, engine decode-batch occupancy, p50/p99 per-token latency
 (wall time of the engine step that emitted each token, measured in a
-separate synced pass so async dispatch can't hide compute), and the prefix-
-cache metrics. `main(workload=...)` accepts "mixed" | "shared" | "both";
+separate synced pass so async dispatch can't hide compute), TTFT and
+queue-wait p50/p99 per workload (derived from the engine's request-lifecycle
+telemetry in the same synced pass, warmup/prime requests excluded), the
+telemetry-overhead check (tokens/s with telemetry off vs on), and the
+prefix-cache metrics. The per-family sweep also reports the number of
+distinct compiled step variants the run dispatched (the recompile tracker —
+the number AOT prefill buckets must drive to a fixed, pre-compiled set).
+
+`main(workload=...)` accepts "mixed" | "shared" | "both";
 `benchmarks/run.py --serving-workload` passes it through
-(`--serving-family` likewise forwards the family sweep).
+(`--serving-family` likewise forwards the family sweep). `--trace-out
+PREFIX` writes each workload's synced-pass event log to
+`PREFIX.<workload>.jsonl` — replayable into per-request TTFT/decode
+timelines via `repro.serving.telemetry.replay_jsonl`.
 """
 import argparse
 import time
@@ -102,11 +112,13 @@ def _workload_shared(n=24, seed=0, prefix_len=96):
     return prompts, news, prefix
 
 
-def _fresh_engine(cfg, params, prompts, *, prefix_caching=True, prime=None):
+def _fresh_engine(cfg, params, prompts, *, prefix_caching=True, prime=None,
+                  telemetry=True, step_timing=False):
     eng = Engine(cfg, params, EngineConfig(
         block_size=16, num_blocks=256, max_blocks_per_seq=8,
         max_slots=MAX_SLOTS, prefill_chunk=32, prefills_per_step=4,
-        prefix_caching=prefix_caching))
+        prefix_caching=prefix_caching, telemetry=telemetry,
+        step_timing=step_timing))
     # warmup: compile prefill/decode once on a throwaway request
     skip = {eng.add_request(prompts[0][:4], 2)}
     eng.drain()
@@ -119,11 +131,12 @@ def _fresh_engine(cfg, params, prompts, *, prefix_caching=True, prime=None):
 
 
 def _run_engine(cfg, params, prompts, max_news, *, prefix_caching=True,
-                prime=None):
+                prime=None, telemetry=True):
     """Throughput pass: free-running steps, one sync at the end. Warmup and
     cache-priming tokens/steps are excluded from every reported number."""
     eng, skip = _fresh_engine(cfg, params, prompts,
-                              prefix_caching=prefix_caching, prime=prime)
+                              prefix_caching=prefix_caching, prime=prime,
+                              telemetry=telemetry)
     warm = dict(eng.stats)
     for p, mn in zip(prompts, max_news):
         eng.add_request(p, mn)
@@ -137,10 +150,16 @@ def _run_engine(cfg, params, prompts, max_news, *, prefix_caching=True,
     return total, wall, occ, hits
 
 
-def _run_engine_latency(cfg, params, prompts, max_news):
+def _run_engine_latency(cfg, params, prompts, max_news, *,
+                        prefix_caching=True, prime=None):
     """Latency pass: block on each step's emitted tokens so per-step wall
-    time reflects device completion, not async dispatch."""
-    eng, _skip = _fresh_engine(cfg, params, prompts)
+    time reflects device completion, not async dispatch. Runs with
+    `step_timing=True`, so the engine's own request-lifecycle timestamps
+    (TTFT, queue wait) are completion times too — returns the engine for
+    telemetry readout alongside the per-token latencies."""
+    eng, skip = _fresh_engine(cfg, params, prompts,
+                              prefix_caching=prefix_caching, prime=prime,
+                              step_timing=True)
     for p, mn in zip(prompts, max_news):
         eng.add_request(p, mn)
     lat = []
@@ -150,7 +169,34 @@ def _run_engine_latency(cfg, params, prompts, max_news):
         jax.block_until_ready(eng.next_tok)
         dt = time.perf_counter() - s
         lat.extend([dt] * len(emitted))
-    return np.asarray(lat)
+    return np.asarray(lat), eng, skip
+
+
+def _lifecycle_percentiles(eng, skip):
+    """Per-request TTFT and queue-wait arrays from the engine's telemetry,
+    excluding warmup/prime requests."""
+    ttfts, waits = [], []
+    for rid in eng.requests:
+        if rid in skip:
+            continue
+        tl = eng.telemetry.request_timeline(rid)
+        if tl["ttft"] is not None:
+            ttfts.append(tl["ttft"])
+        if tl["queue_wait"] is not None:
+            waits.append(tl["queue_wait"])
+    return np.asarray(ttfts), np.asarray(waits)
+
+
+def _emit_lifecycle(tag, eng, skip, trace_out=None):
+    ttfts, waits = _lifecycle_percentiles(eng, skip)
+    for name, arr in ((f"serving_{tag}_ttft", ttfts),
+                      (f"serving_{tag}_queue_wait", waits)):
+        for q in (50, 99):
+            emit(f"{name}_p{q}", float(np.percentile(arr, q)) * 1e6)
+    if trace_out:
+        path = f"{trace_out}.{tag}.jsonl"
+        n = eng.telemetry.export_jsonl(path)
+        emit(f"serving_{tag}_trace_events", None, f"{n}@{path}")
 
 
 def _legacy_once(cfg, params, prompts, max_news):
@@ -198,18 +244,25 @@ def _run_legacy_loop(cfg, params, prompts, max_news):
     return useful, wall
 
 
-def _main_mixed(cfg, params):
+def _main_mixed(cfg, params, trace_out=None):
     prompts, max_news = _workload()
 
     total, wall, occ, _hits = _run_engine(cfg, params, prompts, max_news)
     tps_engine = total / wall
+    total_o, wall_o, _occ, _h = _run_engine(cfg, params, prompts, max_news,
+                                            telemetry=False)
+    tps_off = total_o / wall_o
     useful, wall_legacy = _run_legacy(cfg, params, prompts, max_news)
     tps_legacy = useful / wall_legacy
     useful_l, wall_loop = _run_legacy_loop(cfg, params, prompts, max_news)
     tps_loop = useful_l / wall_loop
-    lat = _run_engine_latency(cfg, params, prompts, max_news)
+    lat, eng_lat, skip = _run_engine_latency(cfg, params, prompts, max_news)
 
     emit("serving_engine_tokens_per_s", wall / total * 1e6, f"{tps_engine:.1f}")
+    emit("serving_telemetry_off_tokens_per_s", wall_o / total_o * 1e6,
+         f"{tps_off:.1f}")
+    emit("serving_telemetry_overhead", None,
+         f"{wall / total / (wall_o / total_o):.3f}x")
     emit("serving_legacy_batched_tokens_per_s", wall_legacy / useful * 1e6,
          f"{tps_legacy:.1f}")
     emit("serving_legacy_loop_tokens_per_s", wall_loop / useful_l * 1e6,
@@ -217,12 +270,19 @@ def _main_mixed(cfg, params):
     emit("serving_engine_occupancy", None, f"{occ:.3f}")
     emit("serving_engine_p50_token_latency", float(np.percentile(lat, 50)) * 1e6)
     emit("serving_engine_p99_token_latency", float(np.percentile(lat, 99)) * 1e6)
+    _emit_lifecycle("mixed", eng_lat, skip, trace_out)
+    # host/device split of the synced pass (engine-step timeline)
+    host = eng_lat.telemetry.registry.get("engine_step_host_seconds")
+    dev = eng_lat.telemetry.registry.get("engine_step_device_seconds")
+    if dev.sum + host.sum > 0:
+        emit("serving_engine_step_host_fraction", None,
+             f"{host.sum / (host.sum + dev.sum):.3f}")
     emit("serving_speedup_vs_legacy_batched", None,
          f"{tps_engine / tps_legacy:.2f}x")
     emit("serving_speedup_vs_legacy_loop", None, f"{tps_engine / tps_loop:.2f}x")
 
 
-def _main_shared(cfg, params):
+def _main_shared(cfg, params, trace_out=None):
     prompts, max_news, prefix = _workload_shared()
     prompt_tokens = sum(p.shape[0] for p in prompts)
 
@@ -231,6 +291,8 @@ def _main_shared(cfg, params):
     total_n, wall_n, _occ, _h = _run_engine(
         cfg, params, prompts, max_news, prefix_caching=False, prime=prefix)
     tps_cache, tps_nocache = total_c / wall_c, total_n / wall_n
+    _lat, eng_lat, skip = _run_engine_latency(
+        cfg, params, prompts, max_news, prefix_caching=True, prime=prefix)
 
     emit("serving_prefix_cache_tokens_per_s", wall_c / total_c * 1e6,
          f"{tps_cache:.1f}")
@@ -241,6 +303,7 @@ def _main_shared(cfg, params):
     emit("serving_prefill_tokens_saved", None, str(int(hits)))
     emit("serving_prefix_cache_speedup", None,
          f"{tps_cache / tps_nocache:.2f}x")
+    _emit_lifecycle("shared", eng_lat, skip, trace_out)
 
 
 def _main_family(family):
@@ -278,18 +341,23 @@ def _main_family(family):
          f"{mem / 1024:.1f}")
     emit(f"serving_family_{family}_peak_pool_utilization", None,
          f"{peak:.3f}")
+    # distinct compiled step variants the run dispatched — must stay at a
+    # handful (decode + prefill [+ reset_slot for recurrent kinds]); growth
+    # here is serving-time recompilation
+    emit(f"serving_family_{family}_compiled_step_variants", None,
+         str(eng.telemetry.recompiles.total))
 
 
-def main(workload: str = "both", config_family: str = None):
+def main(workload: str = "both", config_family: str = None, trace_out=None):
     if workload not in ("mixed", "shared", "both", "none"):
         raise ValueError(f"unknown workload {workload!r}")
     if workload != "none":
         cfg = _cfg()
         params = T.init_params(cfg, jax.random.PRNGKey(0))
         if workload in ("mixed", "both"):
-            _main_mixed(cfg, params)
+            _main_mixed(cfg, params, trace_out)
         if workload in ("shared", "both"):
-            _main_shared(cfg, params)
+            _main_shared(cfg, params, trace_out)
     if config_family:
         fams = FAMILIES if config_family == "all" else (config_family,)
         for fam in fams:
@@ -303,5 +371,9 @@ if __name__ == "__main__":
     ap.add_argument("--config-family",
                     choices=FAMILIES + ("all",), default=None,
                     help="also run the per-family state-provider sweep")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="write each workload's synced-pass event log to "
+                         "PREFIX.<workload>.jsonl (replay via "
+                         "repro.serving.telemetry.replay_jsonl)")
     args = ap.parse_args()
-    main(args.workload, args.config_family)
+    main(args.workload, args.config_family, args.trace_out)

@@ -41,6 +41,19 @@ token can be re-run privately for its logits.
 A ``ShardingPlan`` may be passed for multi-device serving: params are placed
 by the plan's rules and all device steps run under the plan context so
 activation constraints apply.
+
+Telemetry (``EngineConfig.telemetry``, on by default; see
+``serving.telemetry`` and the README's Telemetry section): every request's
+lifecycle (arrive/admit/prefix_hit/prefill_chunk/first_token/decode_token/
+finish) is traced with monotonic timestamps, all engine and pool counters
+live in one metrics registry (``Engine.stats`` remains as a back-compat
+read-only view), the jitted step fns are wrapped to count unique trace keys
+(distinct compiled variants), and prefill/decode run under
+``jax.profiler.TraceAnnotation`` spans. ``EngineConfig.step_timing``
+additionally blocks on device results inside ``step()`` to split host
+scheduling time from device time per step — only the timing path blocks, so
+throughput runs keep the async host-ahead pipeline. Telemetry never changes
+emitted tokens: greedy outputs are bit-identical with it on or off.
 """
 from __future__ import annotations
 
@@ -56,6 +69,7 @@ import numpy as np
 from repro.core import parallelism as par
 from repro.models import state_providers as SP
 from repro.models import transformer as T
+from repro.serving import telemetry as TM
 from repro.serving.engine.paged_cache import BlockPool
 from repro.serving.engine.scheduler import DECODING, FINISHED, Request, Scheduler
 
@@ -71,6 +85,8 @@ class EngineConfig:
     prefix_caching: bool = True         # alias cached prompt-prefix blocks
     attn_impl: str = "ref"              # "ref" | "kernel" (Pallas paged-decode)
     interpret: Optional[bool] = None    # kernel interpret mode (None: off-TPU)
+    telemetry: bool = True              # lifecycle tracing + metrics registry
+    step_timing: bool = False           # block per device call to time steps
 
 
 def _build_step_fns(cfg, e: EngineConfig, plan):
@@ -131,10 +147,11 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
 
 
 def _step_fn_key(e: EngineConfig) -> EngineConfig:
-    """Host-only fields (scheduler policy, prefix caching) are never read by
-    the traced functions — normalize them out of the compile-cache key so
-    toggling them reuses the compiled steps."""
-    return dataclasses.replace(e, prefix_caching=True, prefills_per_step=1)
+    """Host-only fields (scheduler policy, prefix caching, telemetry) are
+    never read by the traced functions — normalize them out of the
+    compile-cache key so toggling them reuses the compiled steps."""
+    return dataclasses.replace(e, prefix_caching=True, prefills_per_step=1,
+                               telemetry=True, step_timing=False)
 
 
 @functools.lru_cache(maxsize=None)
@@ -173,9 +190,47 @@ class Engine:
         self.prefix_caching = (e.prefix_caching and all(
             p.supports_prefix_caching for p in self.providers))
 
+        # telemetry: one registry + tracer + recompile tracker per engine.
+        # The pool shares the registry so `pool_*` metrics export alongside
+        # `engine_*`; everything is host-side and disabled-path cheap.
+        self.telemetry = TM.Telemetry(enabled=e.telemetry,
+                                      step_timing=e.step_timing)
+        reg = self.telemetry.registry
+        self._m_decode_steps = reg.counter(
+            "engine_decode_steps_total", "batched decode steps dispatched")
+        self._m_prefill_chunks = reg.counter(
+            "engine_prefill_chunks_total", "prompt prefill chunks dispatched")
+        self._m_emitted = reg.counter(
+            "engine_tokens_emitted_total", "tokens emitted across requests")
+        self._m_occupancy = reg.counter(
+            "engine_occupancy_sum",
+            "sum over decode steps of decode_batch/max_slots")
+        self._m_prefix_hits = reg.counter(
+            "engine_prefix_hit_tokens_total",
+            "prompt tokens served from the prefix cache")
+        self._m_cow = reg.counter(
+            "engine_cow_copies_total", "copy-on-write block duplications")
+        self._m_defrags = reg.counter(
+            "engine_defrags_total", "pool defragmentation passes")
+        self._g_waiting = reg.gauge(
+            "engine_waiting_requests", "requests queued awaiting admission")
+        self._g_running = reg.gauge(
+            "engine_running_requests", "requests prefilling or decoding")
+        self._g_free_blocks = reg.gauge(
+            "pool_free_blocks", "allocatable blocks (incl. cached-free)")
+        self._h_queue_wait = reg.histogram(
+            "engine_request_queue_wait_seconds", "arrive -> admit wait")
+        self._h_ttft = reg.histogram(
+            "engine_request_ttft_seconds", "arrive -> first token")
+        self._h_e2e = reg.histogram(
+            "engine_request_e2e_seconds", "arrive -> finish")
+
         self.pool_state = T.init_paged_state(cfg, e.num_blocks, e.block_size,
                                              max_slots=e.max_slots)
-        self.block_pool = BlockPool(e.num_blocks, e.block_size)
+        on_evict = ((lambda b: self.telemetry.record(None, "evict", block=b))
+                    if self.telemetry.enabled else None)
+        self.block_pool = BlockPool(e.num_blocks, e.block_size,
+                                    registry=reg, on_evict=on_evict)
         self.scheduler = Scheduler(
             self.block_pool, max_slots=e.max_slots,
             max_blocks_per_seq=e.max_blocks_per_seq,
@@ -193,9 +248,6 @@ class Engine:
 
         self._next_rid = 0
         self.requests: dict = {}        # rid -> Request (all ever submitted)
-        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
-                      "emitted": 0, "occupancy_sum": 0.0,
-                      "prefix_hit_tokens": 0, "cow_copies": 0}
 
         if plan is None:
             self._decode, self._prefill, self._copy_block, self._reset_slot = \
@@ -203,6 +255,27 @@ class Engine:
         else:
             self._decode, self._prefill, self._copy_block, self._reset_slot = \
                 _build_step_fns(cfg, self.ecfg, plan)
+        if self.telemetry.enabled:
+            # count unique trace keys per jitted step fn (the compiled-variant
+            # precursor metric for AOT prefill buckets); compile caching keeps
+            # working — the wrapper only hashes arg shapes/dtypes
+            wrap = self.telemetry.recompiles.wrap
+            self._decode = wrap("decode", self._decode)
+            self._prefill = wrap("prefill", self._prefill)
+            self._copy_block = wrap("copy_block", self._copy_block)
+            self._reset_slot = wrap("reset_slot", self._reset_slot)
+
+    @property
+    def stats(self) -> dict:
+        """Back-compat snapshot of the registry-backed engine counters (the
+        pre-telemetry ad-hoc dict keys). Read-only view — the full metric
+        set lives in ``self.telemetry.registry``."""
+        return {"decode_steps": self._m_decode_steps.value,
+                "prefill_chunks": self._m_prefill_chunks.value,
+                "emitted": self._m_emitted.value,
+                "occupancy_sum": self._m_occupancy.value,
+                "prefix_hit_tokens": self._m_prefix_hits.value,
+                "cow_copies": self._m_cow.value}
 
     # ----------------------------------------------------------------- API
     def blocks_needed(self, total_tokens: int) -> int:
@@ -247,14 +320,36 @@ class Engine:
             key=key, stop_token=stop_token)
         self.requests[rid] = req
         self.scheduler.submit(req)
+        self.telemetry.record(rid, "arrive", prompt_len=int(prompt.shape[0]),
+                              max_new=int(max_new))
         return rid
+
+    def _device_call(self, span: str, fn, *args):
+        """Dispatch one jitted step under a labeled profiler span. In the
+        timing path (`step_timing`) only, block on the results so the
+        measured interval is device completion rather than async dispatch,
+        and accumulate it into the current step's device time."""
+        tel = self.telemetry
+        if not tel.enabled:
+            return fn(*args)
+        with tel.span(span):
+            if not tel.step_timing:
+                return fn(*args)
+            t0 = tel.clock()
+            out = jax.block_until_ready(fn(*args))
+            self._step_device_s += tel.clock() - t0
+            return out
 
     def step(self) -> list:
         """One engine iteration: admit -> prefill chunk(s) -> batched decode.
         Returns the rids that emitted a token this step (token values are
         materialized lazily — read them via `drain()` / `output()`)."""
         e = self.ecfg
+        tel = self.telemetry
         emitted = []
+        self._step_device_s = 0.0
+        t_step = tel.clock() if tel.step_timing else 0.0
+        n_prefills = 0
 
         for req in self.scheduler.admit():
             row = self.block_pool.table(req.rid)
@@ -265,33 +360,52 @@ class Engine:
             if self._has_recurrent:
                 # the slot's recurrent slab rows still hold the previous
                 # occupant's final state — zero them for the newcomer
-                self.pool_state = self._reset_slot(
+                self.pool_state = self._device_call(
+                    "engine/reset_slot", self._reset_slot,
                     self.pool_state, jnp.int32(req.slot))
-            self.stats["prefix_hit_tokens"] += req.prefilled
+            self._m_prefix_hits.inc(req.prefilled)
+            if tel.enabled:
+                t_admit = tel.record(req.rid, "admit", slot=req.slot)
+                t_arrive = tel.tracer.first(req.rid, "arrive")
+                if t_arrive is not None:
+                    self._h_queue_wait.observe(t_admit - t_arrive)
+                if req.prefilled:
+                    tel.record(req.rid, "prefix_hit", tokens=req.prefilled,
+                               blocks=req.shared_blocks
+                               + (1 if req.cow_src is not None else 0))
             if req.cow_src is not None:
                 # whole prompt cached: copy the last matched block into the
                 # private block at its table position, then re-prefill only
                 # the final prompt token there (yields the first-token logits)
                 dst = row[req.prompt_len // e.block_size - 1]
-                self.pool_state = self._copy_block(
+                self.pool_state = self._device_call(
+                    "engine/copy_block", self._copy_block,
                     self.pool_state, jnp.int32(req.cow_src), jnp.int32(dst))
-                self.stats["cow_copies"] += 1
+                self._m_cow.inc()
 
         for req, start, valid in self.scheduler.next_prefills():
             chunk = np.zeros((1, e.prefill_chunk), np.int32)
             chunk[0, :valid] = req.prompt[start:start + valid]
-            greedy, logits, self.pool_state = self._prefill(
+            greedy, logits, self.pool_state = self._device_call(
+                "engine/prefill", self._prefill,
                 self.params, self.pool_state, jnp.asarray(chunk),
                 self.tables[req.slot], jnp.int32(start), jnp.int32(valid),
                 jnp.int32(req.slot))
             req.prefilled += valid
             self.scheduler.register_prefilled(req)
             self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
-            self.stats["prefill_chunks"] += 1
+            self._m_prefill_chunks.inc()
+            n_prefills += 1
+            tel.record(req.rid, "prefill_chunk", start=start, tokens=valid)
             if req.prefilled == req.prompt_len:
                 # prompt complete: the last chunk's logits yield token #1
                 self._record_token(req, greedy, 0, logits, 0)
                 emitted.append(req.rid)
+                if tel.enabled:
+                    t_first = tel.record(req.rid, "first_token")
+                    t_arrive = tel.tracer.first(req.rid, "arrive")
+                    if t_arrive is not None:
+                        self._h_ttft.observe(t_first - t_arrive)
                 req.state = DECODING
                 self.active = self.active.at[req.slot].set(True)
                 if req.done:
@@ -299,19 +413,31 @@ class Engine:
 
         batch = self.scheduler.decode_batch()
         if batch:
-            greedy, logits, self.seq_lens, self.pool_state = self._decode(
+            greedy, logits, self.seq_lens, self.pool_state = self._device_call(
+                "engine/decode", self._decode,
                 self.params, self.pool_state, self.next_tok, self.tables,
                 self.seq_lens, self.active)
             self.next_tok = greedy
-            self.stats["decode_steps"] += 1
-            self.stats["occupancy_sum"] += len(batch) / e.max_slots
+            self._m_decode_steps.inc()
+            self._m_occupancy.inc(len(batch) / e.max_slots)
             for req in batch:
                 self._record_token(req, greedy, req.slot, logits, req.slot)
                 emitted.append(req.rid)
+                tel.record(req.rid, "decode_token")
                 if req.done:
                     self._finish(req)
 
-        self.stats["emitted"] += len(emitted)
+        self._m_emitted.inc(len(emitted))
+        if tel.enabled:
+            self._g_waiting.set(len(self.scheduler.waiting))
+            self._g_running.set(len(self.scheduler.running))
+            self._g_free_blocks.set(self.block_pool.num_free)
+            if tel.step_timing:
+                total = tel.clock() - t_step
+                tel.record_step(
+                    host_s=total - self._step_device_s,
+                    device_s=self._step_device_s, prefills=n_prefills,
+                    decode_batch=len(batch), emitted=len(emitted))
         return emitted
 
     def drain(self, max_steps: int = 100_000) -> dict:
@@ -354,6 +480,9 @@ class Engine:
         Returns the applied permutation `src`
         (``new_pool[i] = old_pool[src[i]]``)."""
         src = self.block_pool.defragment()
+        self._m_defrags.inc()
+        self.telemetry.record(None, "defrag",
+                              moved=int(np.sum(src != np.arange(len(src)))))
         src_j = jnp.asarray(src)
         self.pool_state = {
             f"l{i}": p.defrag_remap(self.pool_state[f"l{i}"], src_j)
@@ -392,3 +521,10 @@ class Engine:
     def _finish(self, req: Request) -> None:
         self.active = self.active.at[req.slot].set(False)
         self.scheduler.finish(req)
+        tel = self.telemetry
+        if tel.enabled:
+            t_fin = tel.record(req.rid, "finish",
+                               generated=len(req.out_tokens))
+            t_arrive = tel.tracer.first(req.rid, "arrive")
+            if t_arrive is not None:
+                self._h_e2e.observe(t_fin - t_arrive)

@@ -38,8 +38,11 @@ from __future__ import annotations
 import hashlib
 from collections import deque
 from dataclasses import dataclass, field
+from typing import Callable, Optional
 
 import numpy as np
+
+from repro.serving.telemetry import MetricsRegistry
 
 
 class BlockPoolError(RuntimeError):
@@ -63,12 +66,16 @@ def prefix_hashes(tokens, block_size: int) -> list:
 class BlockPool:
     num_blocks: int
     block_size: int
+    # metrics go through a telemetry registry (the Engine passes its own so
+    # pool counters land in the same snapshot); on_evict lets the owner
+    # record an `evict` lifecycle event per reclaimed cached block
+    registry: Optional[MetricsRegistry] = None
+    on_evict: Optional[Callable[[int], None]] = None
     _free: deque = field(init=False)
     _ref: list = field(init=False)        # block id -> refcount
     _owned: dict = field(init=False)      # rid -> ordered list of block ids
     _index: dict = field(init=False)      # prefix hash -> block id
     _hash_of: dict = field(init=False)    # block id -> prefix hash (inverse)
-    stats: dict = field(init=False)
 
     def __post_init__(self):
         self._free = deque(range(self.num_blocks - 1, -1, -1))  # pops 0 first
@@ -76,8 +83,34 @@ class BlockPool:
         self._owned = {}
         self._index = {}
         self._hash_of = {}
-        self.stats = {"lookups": 0, "hit_blocks": 0, "evictions": 0,
-                      "registrations": 0}
+        if self.registry is None:
+            self.registry = MetricsRegistry()
+        reg = self.registry
+        self._m_lookups = reg.counter(
+            "pool_prefix_lookups_total", "prefix-index lookups at admission")
+        self._m_hit_blocks = reg.counter(
+            "pool_prefix_hit_blocks_total", "cached blocks matched at admission")
+        self._m_evictions = reg.counter(
+            "pool_evictions_total", "cached-free blocks reclaimed (LRU)")
+        self._m_registrations = reg.counter(
+            "pool_registrations_total", "blocks published to the prefix index")
+
+    @property
+    def stats(self) -> dict:
+        """Back-compat snapshot of the registry-backed pool counters (the
+        pre-telemetry ad-hoc dict keys). Read-only view: mutate through the
+        counters, never through this dict."""
+        return {"lookups": self._m_lookups.value,
+                "hit_blocks": self._m_hit_blocks.value,
+                "evictions": self._m_evictions.value,
+                "registrations": self._m_registrations.value}
+
+    def note_prefix_lookup(self, hit_blocks: int) -> None:
+        """Record one admission-time prefix lookup that matched `hit_blocks`
+        cached blocks (the scheduler calls this only on the attempt that
+        admits, so a blocked head request doesn't skew hit rates)."""
+        self._m_lookups.inc()
+        self._m_hit_blocks.inc(hit_blocks)
 
     # ------------------------------------------------------------- queries
     @property
@@ -128,7 +161,9 @@ class BlockPool:
             b = self._free.pop()
             if b in self._hash_of:                      # LRU eviction
                 del self._index[self._hash_of.pop(b)]
-                self.stats["evictions"] += 1
+                self._m_evictions.inc()
+                if self.on_evict is not None:
+                    self.on_evict(b)
             self._ref[b] = 1
             got.append(b)
         self._owned.setdefault(rid, []).extend(got)
@@ -172,7 +207,7 @@ class BlockPool:
             raise BlockPoolError(f"block {block} already registered")
         self._index[key] = block
         self._hash_of[block] = key
-        self.stats["registrations"] += 1
+        self._m_registrations.inc()
         return True
 
     def match_prefix(self, keys: list) -> list:
@@ -213,7 +248,11 @@ class BlockPool:
         free blocks (content forgotten); live registered blocks stay owned
         but are no longer shareable. Returns entries dropped."""
         n = len(self._index)
-        self.stats["evictions"] += self.num_cached_free
+        for b in self._free:
+            if b in self._hash_of:
+                self._m_evictions.inc()
+                if self.on_evict is not None:
+                    self.on_evict(b)
         self._index.clear()
         self._hash_of.clear()
         return n

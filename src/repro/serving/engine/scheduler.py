@@ -132,9 +132,8 @@ class Scheduler:
                 break                   # FCFS: don't starve the head
             self.waiting.popleft()
             if self.prefix_caching:
-                self.pool.stats["lookups"] += 1
-                self.pool.stats["hit_blocks"] += \
-                    len(matched) + (1 if cow is not None else 0)
+                self.pool.note_prefix_lookup(
+                    len(matched) + (1 if cow is not None else 0))
             if matched:
                 self.pool.share(req.rid, matched)
             self.pool.alloc(req.rid, need - len(matched))

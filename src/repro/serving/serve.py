@@ -91,31 +91,41 @@ def generate(cfg, params, prompt_tokens, max_new, *, key=None, temperature=0.0,
         raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
     if prefill_mode == "auto":
         prefill_mode = "batched" if T.supports_batched_prefill(cfg) else "loop"
+    # labeled spans so device traces separate the prefill and decode phases
+    # (the engine labels its phases the same way — serving.telemetry)
     if prefill_mode == "batched":
-        logits, cache = _cached_prefill_step(cfg)(params, cache, prompt_tokens)
+        with jax.profiler.TraceAnnotation("serve/prefill"):
+            logits, cache = _cached_prefill_step(cfg)(params, cache,
+                                                      prompt_tokens)
     else:  # reference path: token-by-token (any family)
         logits = None
-        for i in range(S0):
-            logits, cache = step(params, cache, prompt_tokens[:, i], jnp.int32(i))
+        with jax.profiler.TraceAnnotation("serve/prefill"):
+            for i in range(S0):
+                logits, cache = step(params, cache, prompt_tokens[:, i],
+                                     jnp.int32(i))
     out = []
-    for j in range(max_new):
-        key, sub = jax.random.split(key)
-        tok = sample(logits, sub, temperature)
-        out.append(tok)
-        logits, cache = step(params, cache, tok, jnp.int32(S0 + j))
+    with jax.profiler.TraceAnnotation("serve/decode"):
+        for j in range(max_new):
+            key, sub = jax.random.split(key)
+            tok = sample(logits, sub, temperature)
+            out.append(tok)
+            logits, cache = step(params, cache, tok, jnp.int32(S0 + j))
     return jnp.stack(out, axis=1)
 
 
 def engine_generate(cfg, params, prompts, max_news, *, engine_cfg=None,
-                    plan=None):
+                    plan=None, return_engine=False):
     """Greedy generation for a batch of VARIABLE-length prompts through the
     continuous-batching Engine (any family the state providers cover: full,
     sliding, ssm, hybrid). `prompts`: list of 1-D int token arrays;
     `max_news`: per-request generation budgets. Returns a list of np arrays
     in request order — greedy outputs are bit-identical to per-request
-    `generate` calls."""
+    `generate` calls. With `return_engine=True` also returns the drained
+    Engine so callers can read `engine.telemetry` (request timelines, metric
+    snapshots, exporters)."""
     from repro.serving.engine import Engine, EngineConfig
     eng = Engine(cfg, params, engine_cfg or EngineConfig(), plan=plan)
     rids = [eng.add_request(p, int(m)) for p, m in zip(prompts, max_news)]
     outs = eng.drain()
-    return [outs[r] for r in rids]
+    outs = [outs[r] for r in rids]
+    return (outs, eng) if return_engine else outs

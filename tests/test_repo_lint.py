@@ -1,0 +1,47 @@
+"""Repo lint: serving metrics must flow through the telemetry registry.
+
+Any raw mutation of an ad-hoc stats dict (``self.stats["x"] += 1`` and
+friends) inside ``src/repro/serving/`` is a regression back to the three
+scattered dicts the registry superseded — only telemetry.py may own metric
+state."""
+import pathlib
+import re
+
+import pytest
+
+pytestmark = [pytest.mark.serving, pytest.mark.telemetry]
+
+SERVING = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "serving"
+
+# .stats[...] followed by an (augmented) assignment; `==` comparisons and
+# plain reads don't match because they aren't followed by an assignment op.
+_RAW_STATS_MUTATION = re.compile(
+    r"\.stats\[[^\]]+\]\s*(?:[-+*/|&^%]|//|>>|<<)?=(?!=)")
+
+
+def test_no_raw_stats_mutations_outside_telemetry():
+    assert SERVING.is_dir()
+    offenders = []
+    for path in sorted(SERVING.rglob("*.py")):
+        if path.name == "telemetry.py":
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if _RAW_STATS_MUTATION.search(line):
+                offenders.append(f"{path.relative_to(SERVING)}:{lineno}: "
+                                 f"{line.strip()}")
+    assert not offenders, (
+        "raw stats-dict mutations found (route through the telemetry "
+        "MetricsRegistry instead):\n" + "\n".join(offenders))
+
+
+def test_lint_regex_catches_the_banned_patterns():
+    bad = ['self.stats["lookups"] += 1',
+           "pool.stats['evictions'] = 0",
+           'self.stats["x"] //= 2']
+    good = ['assert eng.stats["emitted"] == 6',
+            'hits = pool.stats["hit_blocks"]',
+            'if self.stats["lookups"] == 0:']
+    for s in bad:
+        assert _RAW_STATS_MUTATION.search(s), s
+    for s in good:
+        assert not _RAW_STATS_MUTATION.search(s), s
