@@ -2,7 +2,10 @@
 Prints `name,us_per_call,derived` CSV rows.
 
 `--serving-workload mixed|shared|both` is passed through to
-benchmarks.serving_bench (shared = the prefix-caching comparison);
+benchmarks.serving_bench (shared = the prefix-caching comparison); the mixed
+workload's rows include the packed-prefill TTFT p50/p99 vs the B=1 chunked
+baseline, the per-(chunk x segments) AOT-bucket dispatch counts, and the
+prefill variants seen-vs-declared check (new=0 after warmup).
 `--serving-family full|sliding|ssm|hybrid|all` adds the per-family
 state-provider sweep; `--serving-trace-out PREFIX` writes each workload's
 request-lifecycle event log to PREFIX.<workload>.jsonl (replayable via

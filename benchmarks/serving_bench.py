@@ -31,9 +31,13 @@ separate synced pass so async dispatch can't hide compute), TTFT and
 queue-wait p50/p99 per workload (derived from the engine's request-lifecycle
 telemetry in the same synced pass, warmup/prime requests excluded), the
 telemetry-overhead check (tokens/s with telemetry off vs on), and the
-prefix-cache metrics. The per-family sweep also reports the number of
-distinct compiled step variants the run dispatched (the recompile tracker —
-the number AOT prefill buckets must drive to a fixed, pre-compiled set).
+prefix-cache metrics. Packed-prefill rows: TTFT under packing vs the B=1
+chunked baseline (`serving_mixed_unpacked_ttft_*`,
+`serving_packed_prefill_ttft_speedup`), per-(chunk x segments) bucket
+dispatch counts, and `serving_*_prefill_variants` — prefill trace keys seen
+vs declared AOT buckets, where "new=0" certifies the warmup compiled every
+variant steady-state serving dispatches. The per-family sweep also reports
+the total number of distinct compiled step variants (recompile tracker).
 
 `main(workload=...)` accepts "mixed" | "shared" | "both";
 `benchmarks/run.py --serving-workload` passes it through
@@ -113,13 +117,14 @@ def _workload_shared(n=24, seed=0, prefix_len=96):
 
 
 def _fresh_engine(cfg, params, prompts, *, prefix_caching=True, prime=None,
-                  telemetry=True, step_timing=False):
+                  telemetry=True, step_timing=False, packed_prefill=True):
     eng = Engine(cfg, params, EngineConfig(
         block_size=16, num_blocks=256, max_blocks_per_seq=8,
         max_slots=MAX_SLOTS, prefill_chunk=32, prefills_per_step=4,
         prefix_caching=prefix_caching, telemetry=telemetry,
-        step_timing=step_timing))
-    # warmup: compile prefill/decode once on a throwaway request
+        step_timing=step_timing, packed_prefill=packed_prefill))
+    # warmup: compile decode once on a throwaway request (every prefill
+    # bucket is already AOT-compiled at engine construction)
     skip = {eng.add_request(prompts[0][:4], 2)}
     eng.drain()
     if prime is not None:
@@ -151,7 +156,7 @@ def _run_engine(cfg, params, prompts, max_news, *, prefix_caching=True,
 
 
 def _run_engine_latency(cfg, params, prompts, max_news, *,
-                        prefix_caching=True, prime=None):
+                        prefix_caching=True, prime=None, packed_prefill=True):
     """Latency pass: block on each step's emitted tokens so per-step wall
     time reflects device completion, not async dispatch. Runs with
     `step_timing=True`, so the engine's own request-lifecycle timestamps
@@ -159,7 +164,7 @@ def _run_engine_latency(cfg, params, prompts, max_news, *,
     telemetry readout alongside the per-token latencies."""
     eng, skip = _fresh_engine(cfg, params, prompts,
                               prefix_caching=prefix_caching, prime=prime,
-                              step_timing=True)
+                              step_timing=True, packed_prefill=packed_prefill)
     for p, mn in zip(prompts, max_news):
         eng.add_request(p, mn)
     lat = []
@@ -197,6 +202,19 @@ def _emit_lifecycle(tag, eng, skip, trace_out=None):
         path = f"{trace_out}.{tag}.jsonl"
         n = eng.telemetry.export_jsonl(path)
         emit(f"serving_{tag}_trace_events", None, f"{n}@{path}")
+
+
+def _emit_prefill_variants(tag, eng):
+    """Prefill trace keys seen vs. declared buckets (new must be 0 — the
+    AOT warmup contract) plus per-bucket dispatch counts."""
+    declared = len(eng.prefill_grid)
+    seen = eng.telemetry.recompiles.unique("prefill")
+    emit(f"serving_{tag}_prefill_variants", None,
+         f"{seen}/{declared} declared (new={seen - declared})")
+    for (c, g), n in sorted(eng.bucket_dispatches().items()):
+        if n:
+            emit(f"serving_{tag}_prefill_bucket_c{c}g{g}_dispatches", None,
+                 str(n))
 
 
 def _legacy_once(cfg, params, prompts, max_news):
@@ -271,6 +289,18 @@ def _main_mixed(cfg, params, trace_out=None):
     emit("serving_engine_p50_token_latency", float(np.percentile(lat, 50)) * 1e6)
     emit("serving_engine_p99_token_latency", float(np.percentile(lat, 99)) * 1e6)
     _emit_lifecycle("mixed", eng_lat, skip, trace_out)
+    _emit_prefill_variants("mixed", eng_lat)
+    # packed-prefill TTFT vs. the B=1 chunked baseline (same synced-pass
+    # methodology, packing off => one G=1 bucket-padded call per chunk)
+    _lat_u, eng_unp, skip_u = _run_engine_latency(
+        cfg, params, prompts, max_news, packed_prefill=False)
+    ttft_p, _w = _lifecycle_percentiles(eng_lat, skip)
+    ttft_u, _w = _lifecycle_percentiles(eng_unp, skip_u)
+    for q in (50, 99):
+        emit(f"serving_mixed_unpacked_ttft_p{q}",
+             float(np.percentile(ttft_u, q)) * 1e6)
+    emit("serving_packed_prefill_ttft_speedup", None,
+         f"{np.percentile(ttft_u, 50) / np.percentile(ttft_p, 50):.2f}x")
     # host/device split of the synced pass (engine-step timeline)
     host = eng_lat.telemetry.registry.get("engine_step_host_seconds")
     dev = eng_lat.telemetry.registry.get("engine_step_device_seconds")
@@ -304,6 +334,7 @@ def _main_shared(cfg, params, trace_out=None):
     emit("serving_prefix_cache_speedup", None,
          f"{tps_cache / tps_nocache:.2f}x")
     _emit_lifecycle("shared", eng_lat, skip, trace_out)
+    _emit_prefill_variants("shared", eng_lat)
 
 
 def _main_family(family):
@@ -341,11 +372,12 @@ def _main_family(family):
          f"{mem / 1024:.1f}")
     emit(f"serving_family_{family}_peak_pool_utilization", None,
          f"{peak:.3f}")
-    # distinct compiled step variants the run dispatched — must stay at a
-    # handful (decode + prefill [+ reset_slot for recurrent kinds]); growth
-    # here is serving-time recompilation
+    # distinct compiled step variants the run dispatched — a fixed set
+    # (decode + the declared AOT prefill buckets [+ reset_slot for
+    # recurrent kinds]); growth here is serving-time recompilation
     emit(f"serving_family_{family}_compiled_step_variants", None,
          str(eng.telemetry.recompiles.total))
+    _emit_prefill_variants(f"family_{family}", eng)
 
 
 def main(workload: str = "both", config_family: str = None, trace_out=None):

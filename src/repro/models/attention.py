@@ -234,75 +234,83 @@ def attention_decode_paged(params, x, kv, block_tables, positions, attn_lens,
     return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
 
-def attention_prefill_paged(params, x, kv, table_row, start, valid_len, cfg):
-    """Chunked prefill for ONE sequence against the paged pool. x: (1,C,D) —
-    chunk of the prompt starting at absolute position `start`, of which the
-    first `valid_len` tokens are real (the rest padding). Writes the chunk's
-    K/V into the pool, then attends causally over the whole prefix gathered
-    via the block table. Returns (out (1,C,D), new kv)."""
+def attention_prefill_paged(params, x, kv, table_rows, starts, valids, cfg):
+    """Segment-masked packed prefill against the paged pool. x: (G,C,D) —
+    one prompt chunk per segment, segment g starting at absolute position
+    `starts[g]`, of which the first `valids[g]` tokens are real (the rest
+    padding; `valids[g] == 0` marks an all-padding segment whose writes are
+    dropped and whose output rows the caller ignores). Segments own disjoint
+    block tables (shared prefix blocks are read-only and not written here),
+    so the combined scatter plus per-segment gathers are race-free. Writes
+    each segment's chunk K/V into the pool, then attends causally over each
+    segment's own prefix gathered via its table row. Returns
+    (out (G,C,D), new kv)."""
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    C = x.shape[1]
-    positions = (start + jnp.arange(C))[None]                     # (1, C)
+    G, C = x.shape[0], x.shape[1]
+    pos = starts[:, None] + jnp.arange(C)[None, :]                # (G, C)
+    positions = pos
     if cfg.rope_mode == "mrope":
-        positions = jnp.broadcast_to(positions[None], (3, 1, C))
+        positions = jnp.broadcast_to(positions[None], (3, G, C))
     q, k, v = _project_qkv(params, x, positions, cfg, None)
 
     N, bs = kv["k"].shape[0], kv["k"].shape[1]
-    pos = start + jnp.arange(C)
-    bids = jnp.where(jnp.arange(C) < valid_len, table_row[pos // bs], N)
+    valid = jnp.arange(C)[None, :] < valids[:, None]              # (G, C)
+    bids = jnp.where(
+        valid, jnp.take_along_axis(table_rows, pos // bs, axis=1), N)
     offs = pos % bs
     kv = {
-        "k": kv["k"].at[bids, offs].set(k[0], mode="drop"),
-        "v": kv["v"].at[bids, offs].set(v[0], mode="drop"),
+        "k": kv["k"].at[bids, offs].set(k, mode="drop"),
+        "v": kv["v"].at[bids, offs].set(v, mode="drop"),
     }
 
-    P = table_row.shape[0]
+    P = table_rows.shape[1]
     n_rep = h // hkv
-    kk = _repeat_kv(kv["k"][table_row].reshape(1, P * bs, hkv, hd), n_rep)
-    vv = _repeat_kv(kv["v"][table_row].reshape(1, P * bs, hkv, hd), n_rep)
+    kk = _repeat_kv(kv["k"][table_rows].reshape(G, P * bs, hkv, hd), n_rep)
+    vv = _repeat_kv(kv["v"][table_rows].reshape(G, P * bs, hkv, hd), n_rep)
     scale = 1.0 / np.sqrt(hd)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
-    mask = jnp.arange(P * bs)[None, :] <= pos[:, None]            # (C, P*bs)
-    s = jnp.where(mask[None, None], s, NEG_INF)
+    mask = jnp.arange(P * bs)[None, None, :] <= pos[:, :, None]   # (G, C, P*bs)
+    s = jnp.where(mask[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(1, C, h * hd)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(G, C, h * hd)
     return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
 
-def attention_prefill_ring(params, x, kv, table_row, start, valid_len, cfg,
+def attention_prefill_ring(params, x, kv, table_rows, starts, valids, cfg,
                            *, window, ring_pages):
-    """Chunked prefill for ONE sequence against a RING-paged pool. x: (1,C,D)
-    — chunk starting at absolute position `start`, first `valid_len` tokens
-    real. The sequence owns only `ring_pages` blocks; position p lives at
-    `table_row[(p // bs) % ring_pages]`, offset `p % bs`.
+    """Segment-masked packed prefill against a RING-paged pool. x: (G,C,D) —
+    one chunk per segment starting at `starts[g]`, first `valids[g]` tokens
+    real. Each segment owns only `ring_pages` blocks; its position p lives
+    at `table_rows[g, (p // bs) % ring_pages]`, offset `p % bs`.
 
     Unlike the full-attention path (write, then gather everything back),
     the pre-chunk ring content is gathered BEFORE the chunk's writes: on
     wraparound the chunk overwrites pages that early queries still need, so
     read-then-write is required for correctness. Each query t attends the
-    union of {pre-chunk ring keys} ∪ {the chunk's own K/V}, masked to its
-    window (t - window, t]. Returns (out (1,C,D), new kv)."""
+    union of {its segment's pre-chunk ring keys} ∪ {its segment's chunk},
+    masked to its window (t - window, t]. Returns (out (G,C,D), new kv)."""
     from repro.kernels.paged_attention.ref import ring_key_positions
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    C = x.shape[1]
-    positions = (start + jnp.arange(C))[None]                     # (1, C)
+    G, C = x.shape[0], x.shape[1]
+    pos = starts[:, None] + jnp.arange(C)[None, :]                # (G, C)
+    positions = pos
     if cfg.rope_mode == "mrope":
-        positions = jnp.broadcast_to(positions[None], (3, 1, C))
+        positions = jnp.broadcast_to(positions[None], (3, G, C))
     q, k, v = _project_qkv(params, x, positions, cfg, window)
 
     N, bs = kv["k"].shape[0], kv["k"].shape[1]
     R = ring_pages
-    pos = start + jnp.arange(C)
 
-    # 1) gather the ring as of position start-1 (before this chunk's writes)
-    ring_row = table_row[:R]
-    old_k = kv["k"][ring_row].reshape(1, R * bs, hkv, hd)
-    old_v = kv["v"][ring_row].reshape(1, R * bs, hkv, hd)
-    old_pos = ring_key_positions((start - 1)[None], R, bs)[0]     # (R*bs,)
+    # 1) gather each segment's ring as of starts-1 (before this chunk's
+    # writes)
+    ring_rows = table_rows[:, :R]                                 # (G, R)
+    old_k = kv["k"][ring_rows].reshape(G, R * bs, hkv, hd)
+    old_v = kv["v"][ring_rows].reshape(G, R * bs, hkv, hd)
+    old_pos = ring_key_positions(starts - 1, R, bs)               # (G, R*bs)
     # entries the pre-chunk ring never held: pages < 0 entirely, and the
     # current page's offsets past (start-1) % bs (previous-lap leftovers,
     # reconstructed as > start-1)
-    old_ok = (old_pos >= 0) & (old_pos <= start - 1)
+    old_ok = (old_pos >= 0) & (old_pos <= (starts - 1)[:, None])
 
     # 2) write the chunk's K/V at their ring slots. Padding rows are
     # dropped, and so is any position lapped by a LATER valid position in
@@ -310,29 +318,31 @@ def attention_prefill_ring(params, x, kv, table_row, start, valid_len, cfg,
     # leaves duplicate-index order undefined, so only each (slot, offset)'s
     # newest lap may write. Skipped positions are > R*bs > window older
     # than the chunk's last token — nothing downstream can attend them.
-    last_valid = start + valid_len - 1
-    write = (jnp.arange(C) < valid_len) & (pos > last_valid - R * bs)
-    bids = jnp.where(write, table_row[(pos // bs) % R], N)
+    last_valid = (starts + valids - 1)[:, None]                   # (G, 1)
+    write = ((jnp.arange(C)[None, :] < valids[:, None])
+             & (pos > last_valid - R * bs))
+    bids = jnp.where(
+        write, jnp.take_along_axis(table_rows, (pos // bs) % R, axis=1), N)
     offs = pos % bs
     kv = {
-        "k": kv["k"].at[bids, offs].set(k[0], mode="drop"),
-        "v": kv["v"].at[bids, offs].set(v[0], mode="drop"),
+        "k": kv["k"].at[bids, offs].set(k, mode="drop"),
+        "v": kv["v"].at[bids, offs].set(v, mode="drop"),
     }
 
-    # 3) attend: keys = pre-chunk ring ∪ the chunk itself
+    # 3) attend: keys = each segment's pre-chunk ring ∪ its own chunk
     n_rep = h // hkv
     kk = _repeat_kv(jnp.concatenate([old_k, k], axis=1), n_rep)
     vv = _repeat_kv(jnp.concatenate([old_v, v], axis=1), n_rep)
-    kpos = jnp.concatenate([old_pos, pos])                        # (R*bs + C,)
-    kok = jnp.concatenate([old_ok, jnp.ones((C,), bool)])
+    kpos = jnp.concatenate([old_pos, pos], axis=1)                # (G, R*bs+C)
+    kok = jnp.concatenate([old_ok, jnp.ones((G, C), bool)], axis=1)
     scale = 1.0 / np.sqrt(hd)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
-    mask = (kok[None, :]
-            & (kpos[None, :] <= pos[:, None])
-            & (kpos[None, :] > pos[:, None] - window))            # (C, K)
-    s = jnp.where(mask[None, None], s, NEG_INF)
+    mask = (kok[:, None, :]
+            & (kpos[:, None, :] <= pos[:, :, None])
+            & (kpos[:, None, :] > pos[:, :, None] - window))      # (G, C, K)
+    s = jnp.where(mask[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(1, C, h * hd)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(G, C, h * hd)
     return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
 

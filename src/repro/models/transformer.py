@@ -419,38 +419,51 @@ def paged_decode_step(cfg: ModelConfig, params, pool, inputs, block_tables,
     return lg, new_pools
 
 
-def _recurrent_prefill_layer(kind, lp, slab, x, valid_len, slot, cfg, shared):
-    """Chunked prefill of ONE sequence through a recurrent layer: a token
-    scan of the decode path (recurrent state has no one-shot prefill), with
-    state updates masked past `valid_len` so the slab ends at exactly the
-    last real token. slab leaves: (max_slots, ...); x: (1, C, D).
-    Returns (y (1,C,D), new slab)."""
-    st0 = jax.tree.map(lambda a: a[slot][None], slab)
+def _recurrent_prefill_layer(kind, lp, slab, x, valids, slots, cfg, shared):
+    """Packed chunked prefill through a recurrent layer: a token scan of the
+    decode path (recurrent state has no one-shot prefill), with per-segment
+    state updates masked past `valids[g]` so each slab row ends at exactly
+    its last real token. slab leaves: (max_slots, ...); x: (G, C, D);
+    slots: (G,) slab row per segment — `slots[g] >= max_slots` marks a
+    padded segment (its gather clamps to an arbitrary row and its write-back
+    is dropped). Returns (y (G,C,D), new slab)."""
+    max_slots = jax.tree.leaves(slab)[0].shape[0]
+    st0 = jax.tree.map(lambda a: a[jnp.minimum(slots, max_slots - 1)], slab)
 
     def body(st, t):
-        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)        # (1,1,D)
+        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)        # (G,1,D)
         yt, new = _apply_layer_decode(kind, lp, st, xt, t, cfg, shared)
-        keep = t < valid_len
-        st = jax.tree.map(lambda n, o: jnp.where(keep, n, o), new, st)
+        keep = t < valids                                         # (G,)
+        st = jax.tree.map(
+            lambda n, o: jnp.where(
+                keep.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, st)
         return st, yt[:, 0]
 
     stf, ys = jax.lax.scan(body, st0, jnp.arange(x.shape[1]))
-    y = ys.swapaxes(0, 1)                                         # (1, C, D)
-    slab = jax.tree.map(lambda a, s: a.at[slot].set(s[0]), slab, stf)
+    y = ys.swapaxes(0, 1)                                         # (G, C, D)
+    slab = jax.tree.map(lambda a, s: a.at[slots].set(s, mode="drop"),
+                        slab, stf)
     return y, slab
 
 
-def paged_prefill_step(cfg: ModelConfig, params, pool, tokens, table_row,
-                       start, valid_len, slot):
-    """Chunked prefill of ONE sequence into its per-kind state. tokens:
-    (1, C) chunk starting at absolute position `start`, first `valid_len`
-    real. `slot` locates the sequence's recurrent slab rows; paged layers
-    use `table_row`. Returns (logits (1,V) of the chunk's last valid token,
-    new pool)."""
+def paged_prefill_packed(cfg: ModelConfig, params, pool, tokens, tables,
+                         starts, valids, slots):
+    """Segment-masked packed prefill: one prompt chunk per segment, all
+    segments in ONE device call. tokens: (G, C) int32 — segment g's chunk
+    starts at absolute position `starts[g]` with the first `valids[g]`
+    tokens real; tables: (S, P) block-table rows indexed by `slots` (the
+    engine passes its full device table so the rows are gathered in-jit).
+    `slots[g] >= S` marks an all-padding segment: its table gather clamps,
+    its paged writes drop (valids[g] == 0) and its recurrent-slab write-back
+    drops, so padded segments never touch sequence state. Segments' block
+    tables are disjoint where written, so packing G chunks is bit-identical
+    to G separate calls. Returns (logits (G, V) of each segment's last
+    valid token, new pool)."""
     x = _embed_tokens(cfg, params, tokens)
     kinds = _layer_kinds(cfg)
     skinds = SP.state_kinds(cfg)
     shared = params.get("shared_attn")
+    rows = jnp.take(tables, jnp.minimum(slots, tables.shape[0] - 1), axis=0)
 
     def scan_body(x, sb):
         sb_params, sb_pool = sb
@@ -464,24 +477,39 @@ def paged_prefill_step(cfg: ModelConfig, params, pool, tokens, table_row,
                 if skind == "ring":
                     rp = SP.ring_pages(cfg.window_size, st["k"].shape[1])
                     y, kv = A.attention_prefill_ring(
-                        p["attn"], h, st, table_row, start, valid_len, cfg,
+                        p["attn"], h, st, rows, starts, valids, cfg,
                         window=cfg.window_size, ring_pages=rp)
                 else:
                     y, kv = A.attention_prefill_paged(
-                        p["attn"], h, st, table_row, start, valid_len, cfg)
+                        p["attn"], h, st, rows, starts, valids, cfg)
                 x = _attn_block(kind, p, lp, x, cfg, y)
                 new_pool[f"l{i}"] = kv
             else:
                 x, new_st = _recurrent_prefill_layer(
-                    kind, lp, st, x, valid_len, slot, cfg, shared)
+                    kind, lp, st, x, valids, slots, cfg, shared)
                 new_pool[f"l{i}"] = new_st
         return x, new_pool
 
     x, new_pools = jax.lax.scan(scan_body, x, (params["blocks"], pool))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    idx = jnp.maximum(valids - 1, 0)                              # (G,)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)     # (G, 1, D)
     lg = logits(cfg, params, last)[:, 0]
     return lg, new_pools
+
+
+def paged_prefill_step(cfg: ModelConfig, params, pool, tokens, table_row,
+                       start, valid_len, slot):
+    """Chunked prefill of ONE sequence into its per-kind state (a G=1
+    packed call). tokens: (1, C) chunk starting at absolute position
+    `start`, first `valid_len` real. `slot` locates the sequence's
+    recurrent slab rows; paged layers use `table_row` (P,). Returns
+    (logits (1,V) of the chunk's last valid token, new pool)."""
+    return paged_prefill_packed(
+        cfg, params, pool, tokens, table_row[None],
+        jnp.asarray(start, jnp.int32)[None],
+        jnp.asarray(valid_len, jnp.int32)[None],
+        jnp.asarray(slot, jnp.int32)[None])
 
 
 def decode_step(cfg: ModelConfig, params, state, inputs, index):

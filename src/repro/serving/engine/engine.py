@@ -12,8 +12,11 @@ the all-full-attention configs where block aliasing is sound.
 Wires the host-side scheduler + block-pool bookkeeping to two jitted device
 functions over the per-kind sequence state:
 
-  * ``paged_prefill_step`` — one prompt chunk of one sequence (chunked
-    prefill; the chunk length is static so there is exactly one compilation).
+  * ``paged_prefill_packed`` — up to ``prefills_per_step`` prompt chunks of
+    DIFFERENT requests packed into one segment-masked call, padded to a
+    declared (chunk-length x num-segments) bucket. Every bucket is compiled
+    once at engine construction (``_warmup_prefill``), so steady-state
+    serving never traces a new prefill variant.
   * ``paged_decode_step``  — one token for EVERY decoding slot at once; new
     requests join and finished requests leave the batch between steps without
     recompilation (shapes are fixed at max_slots).
@@ -71,7 +74,9 @@ from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import telemetry as TM
 from repro.serving.engine.paged_cache import BlockPool
-from repro.serving.engine.scheduler import DECODING, FINISHED, Request, Scheduler
+from repro.serving.engine.scheduler import (DECODING, FINISHED, Request,
+                                            Scheduler, chunk_buckets_for,
+                                            segment_buckets_for)
 
 
 @dataclass(frozen=True)
@@ -87,6 +92,15 @@ class EngineConfig:
     interpret: Optional[bool] = None    # kernel interpret mode (None: off-TPU)
     telemetry: bool = True              # lifecycle tracing + metrics registry
     step_timing: bool = False           # block per device call to time steps
+    prefill_buckets: tuple = ()         # chunk-length buckets; () = one
+                                        #   bucket of prefill_chunk tokens
+    packed_prefill: bool = True         # pack chunks into one prefill call
+
+    def __post_init__(self):
+        # keep the config hashable for the compiled-step cache even when a
+        # caller declares the buckets as a list
+        object.__setattr__(self, "prefill_buckets",
+                           tuple(self.prefill_buckets))
 
 
 def _build_step_fns(cfg, e: EngineConfig, plan):
@@ -117,9 +131,12 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     @in_plan
-    def prefill_fn(params, pool, tokens, table_row, start, valid, slot):
-        logits, pool = T.paged_prefill_step(
-            cfg, params, pool, tokens, table_row, start, valid, slot)
+    def prefill_fn(params, pool, tokens, tables, starts, valids, slots):
+        # packed: tokens (G, C) — one bucket-padded chunk per segment;
+        # starts/valids/slots (G,). Padded segments carry valid == 0 and
+        # slot == max_slots (OOB sentinel), so their writes all drop.
+        logits, pool = T.paged_prefill_packed(
+            cfg, params, pool, tokens, tables, starts, valids, slots)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, logits, pool
 
@@ -147,11 +164,13 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
 
 
 def _step_fn_key(e: EngineConfig) -> EngineConfig:
-    """Host-only fields (scheduler policy, prefix caching, telemetry) are
-    never read by the traced functions — normalize them out of the
-    compile-cache key so toggling them reuses the compiled steps."""
+    """Host-only fields (scheduler policy, prefix caching, telemetry, bucket
+    declarations) are never read by the traced functions — the traced shapes
+    come from the call-time arrays — so normalize them out of the
+    compile-cache key and toggling them reuses the compiled steps."""
     return dataclasses.replace(e, prefix_caching=True, prefills_per_step=1,
-                               telemetry=True, step_timing=False)
+                               telemetry=True, step_timing=False,
+                               prefill_buckets=(), packed_prefill=True)
 
 
 @functools.lru_cache(maxsize=None)
@@ -212,6 +231,9 @@ class Engine:
             "engine_cow_copies_total", "copy-on-write block duplications")
         self._m_defrags = reg.counter(
             "engine_defrags_total", "pool defragmentation passes")
+        self._m_step_syncs = reg.counter(
+            "engine_step_vector_syncs_total",
+            "step vectors materialized on host for stop_token scanning")
         self._g_waiting = reg.gauge(
             "engine_waiting_requests", "requests queued awaiting admission")
         self._g_running = reg.gauge(
@@ -231,13 +253,30 @@ class Engine:
                     if self.telemetry.enabled else None)
         self.block_pool = BlockPool(e.num_blocks, e.block_size,
                                     registry=reg, on_evict=on_evict)
+        # declared AOT prefill buckets: every steady-state prefill dispatch
+        # is padded to one of these (chunk length x segment count) shapes,
+        # and ALL of them are compiled up front by _warmup_prefill
+        self.chunk_buckets = chunk_buckets_for(e.prefill_chunk,
+                                               e.prefill_buckets)
+        self.segment_buckets = segment_buckets_for(e.prefills_per_step,
+                                                   e.packed_prefill)
+        self.prefill_grid = [(c, g) for c in self.chunk_buckets
+                             for g in self.segment_buckets]
+        self._m_bucket = {
+            (c, g): reg.counter(
+                f"engine_prefill_bucket_c{c}g{g}_dispatch_total",
+                f"prefill dispatches at chunk bucket {c} x {g} segments")
+            for c, g in self.prefill_grid}
         self.scheduler = Scheduler(
             self.block_pool, max_slots=e.max_slots,
             max_blocks_per_seq=e.max_blocks_per_seq,
             prefill_chunk=e.prefill_chunk,
             prefills_per_step=e.prefills_per_step,
             prefix_caching=self.prefix_caching,
-            block_cost=self.blocks_needed)
+            block_cost=self.blocks_needed,
+            chunk_buckets=self.chunk_buckets,
+            segment_buckets=self.segment_buckets,
+            packed_prefill=e.packed_prefill)
 
         # device-resident slot state (touched from the host only at request
         # lifecycle events; the decode loop never reads it back)
@@ -257,13 +296,32 @@ class Engine:
                 _build_step_fns(cfg, self.ecfg, plan)
         if self.telemetry.enabled:
             # count unique trace keys per jitted step fn (the compiled-variant
-            # precursor metric for AOT prefill buckets); compile caching keeps
+            # metric the AOT warmup must hold at "declared set, counted up
+            # front, zero new at serving time"); compile caching keeps
             # working — the wrapper only hashes arg shapes/dtypes
             wrap = self.telemetry.recompiles.wrap
             self._decode = wrap("decode", self._decode)
             self._prefill = wrap("prefill", self._prefill)
             self._copy_block = wrap("copy_block", self._copy_block)
             self._reset_slot = wrap("reset_slot", self._reset_slot)
+        self._step_device_s = 0.0
+        self._warmup_prefill()
+
+    def _warmup_prefill(self) -> None:
+        """Drive every declared (chunk x segments) prefill bucket through the
+        wrapped prefill fn once at construction, so steady-state serving
+        never traces a new prefill variant. All-padding arguments (valids ==
+        0, slot == max_slots sentinel) make every pool write a no-op — the
+        donated pool round-trips bit-identical, only the executables and the
+        recompile-tracker keys are created."""
+        e = self.ecfg
+        for c, g in self.prefill_grid:
+            _, _, self.pool_state = self._device_call(
+                "engine/warmup_prefill", self._prefill,
+                self.params, self.pool_state, jnp.zeros((g, c), jnp.int32),
+                self.tables, jnp.zeros((g,), jnp.int32),
+                jnp.zeros((g,), jnp.int32),
+                jnp.full((g,), e.max_slots, jnp.int32))
 
     @property
     def stats(self) -> dict:
@@ -276,6 +334,11 @@ class Engine:
                 "occupancy_sum": self._m_occupancy.value,
                 "prefix_hit_tokens": self._m_prefix_hits.value,
                 "cow_copies": self._m_cow.value}
+
+    def bucket_dispatches(self) -> dict:
+        """Serving-time prefill dispatch counts per declared (chunk_len,
+        num_segments) bucket (warmup calls are not counted)."""
+        return {k: int(m.value) for k, m in self._m_bucket.items()}
 
     # ----------------------------------------------------------------- API
     def blocks_needed(self, total_tokens: int) -> int:
@@ -350,6 +413,7 @@ class Engine:
         self._step_device_s = 0.0
         t_step = tel.clock() if tel.step_timing else 0.0
         n_prefills = 0
+        sync_memo = {}                  # one host transfer per step vector
 
         for req in self.scheduler.admit():
             row = self.block_pool.table(req.rid)
@@ -383,33 +447,44 @@ class Engine:
                     self.pool_state, jnp.int32(req.cow_src), jnp.int32(dst))
                 self._m_cow.inc()
 
-        for req, start, valid in self.scheduler.next_prefills():
-            chunk = np.zeros((1, e.prefill_chunk), np.int32)
-            chunk[0, :valid] = req.prompt[start:start + valid]
+        for batch in self.scheduler.next_prefills():
+            # one segment-masked device call per batch: segment j carries
+            # request j's chunk, padded to the (C, G) bucket; missing
+            # segments get valid=0 and the out-of-range slot sentinel
+            C, G = batch.chunk_len, batch.num_segments
+            tokens = np.zeros((G, C), np.int32)
+            starts = np.zeros((G,), np.int32)
+            valids = np.zeros((G,), np.int32)
+            slots = np.full((G,), e.max_slots, np.int32)
+            for j, (req, start, valid) in enumerate(batch.segments):
+                tokens[j, :valid] = req.prompt[start:start + valid]
+                starts[j], valids[j], slots[j] = start, valid, req.slot
             greedy, logits, self.pool_state = self._device_call(
                 "engine/prefill", self._prefill,
-                self.params, self.pool_state, jnp.asarray(chunk),
-                self.tables[req.slot], jnp.int32(start), jnp.int32(valid),
-                jnp.int32(req.slot))
-            req.prefilled += valid
-            self.scheduler.register_prefilled(req)
-            self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
-            self._m_prefill_chunks.inc()
-            n_prefills += 1
-            tel.record(req.rid, "prefill_chunk", start=start, tokens=valid)
-            if req.prefilled == req.prompt_len:
-                # prompt complete: the last chunk's logits yield token #1
-                self._record_token(req, greedy, 0, logits, 0)
-                emitted.append(req.rid)
-                if tel.enabled:
-                    t_first = tel.record(req.rid, "first_token")
-                    t_arrive = tel.tracer.first(req.rid, "arrive")
-                    if t_arrive is not None:
-                        self._h_ttft.observe(t_first - t_arrive)
-                req.state = DECODING
-                self.active = self.active.at[req.slot].set(True)
-                if req.done:
-                    self._finish(req)
+                self.params, self.pool_state, jnp.asarray(tokens),
+                self.tables, jnp.asarray(starts), jnp.asarray(valids),
+                jnp.asarray(slots))
+            self._m_bucket[(C, G)].inc()
+            for j, (req, start, valid) in enumerate(batch.segments):
+                req.prefilled += valid
+                self.scheduler.register_prefilled(req)
+                self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
+                self._m_prefill_chunks.inc()
+                n_prefills += 1
+                tel.record(req.rid, "prefill_chunk", start=start, tokens=valid)
+                if req.prefilled == req.prompt_len:
+                    # prompt complete: segment j's logits yield token #1
+                    self._record_token(req, greedy, j, logits, j, sync_memo)
+                    emitted.append(req.rid)
+                    if tel.enabled:
+                        t_first = tel.record(req.rid, "first_token")
+                        t_arrive = tel.tracer.first(req.rid, "arrive")
+                        if t_arrive is not None:
+                            self._h_ttft.observe(t_first - t_arrive)
+                    req.state = DECODING
+                    self.active = self.active.at[req.slot].set(True)
+                    if req.done:
+                        self._finish(req)
 
         batch = self.scheduler.decode_batch()
         if batch:
@@ -421,7 +496,8 @@ class Engine:
             self._m_decode_steps.inc()
             self._m_occupancy.inc(len(batch) / e.max_slots)
             for req in batch:
-                self._record_token(req, greedy, req.slot, logits, req.slot)
+                self._record_token(req, greedy, req.slot, logits, req.slot,
+                                   sync_memo)
                 emitted.append(req.rid)
                 tel.record(req.rid, "decode_token")
                 if req.done:
@@ -445,10 +521,10 @@ class Engine:
         {rid: np.ndarray of generated tokens} for ALL finished requests."""
         steps = 0
         while self.scheduler.has_work:
+            if steps >= max_steps:      # permit exactly max_steps steps
+                raise RuntimeError("drain did not converge")
             self.step()
             steps += 1
-            if steps > max_steps:
-                raise RuntimeError("drain did not converge")
         memo = {}                       # one transfer per unique step vector
         return {rid: self._materialize(r, memo)
                 for rid, r in self.requests.items() if r.state == FINISHED}
@@ -496,10 +572,13 @@ class Engine:
 
     # ------------------------------------------------------------- internal
     def _record_token(self, req: Request, greedy_vec, greedy_idx,
-                      logits, logits_idx):
+                      logits, logits_idx, sync_memo: dict):
         """Record the request's next token. Greedy requests store a
         (step-vector, index) ref — no host sync; temperature / stop_token
-        requests pay a host round-trip for the concrete value."""
+        requests pay a host round-trip for the concrete value. `sync_memo`
+        (one dict per engine step) caches materialized step vectors so
+        stop_token scanning costs at most ONE transfer per step vector, not
+        one per request."""
         if req.temperature > 0.0:
             req.key, sub = jax.random.split(req.key)
             tok = int(jax.random.categorical(
@@ -508,7 +587,11 @@ class Engine:
             req.out_tokens.append(tok)
             return
         if req.stop_token is not None:
-            tok = int(greedy_vec[greedy_idx])
+            host = sync_memo.get(id(greedy_vec))
+            if host is None:
+                host = sync_memo[id(greedy_vec)] = np.asarray(greedy_vec)
+                self._m_step_syncs.inc()
+            tok = int(host[greedy_idx])
             req.out_tokens.append(tok)
         else:
             req.out_tokens.append((greedy_vec, greedy_idx))

@@ -83,6 +83,7 @@ class BlockPool:
         self._owned = {}
         self._index = {}
         self._hash_of = {}
+        self._n_cached_free = 0         # registered blocks on the free list
         if self.registry is None:
             self.registry = MetricsRegistry()
         reg = self.registry
@@ -121,8 +122,10 @@ class BlockPool:
 
     @property
     def num_cached_free(self) -> int:
-        """Refcount-zero blocks kept only for their prefix-index content."""
-        return sum(1 for b in self._free if b in self._hash_of)
+        """Refcount-zero blocks kept only for their prefix-index content.
+        O(1): a maintained counter (validated against a full scan in
+        `check()`), not a deque scan."""
+        return self._n_cached_free
 
     @property
     def utilization(self) -> float:
@@ -161,6 +164,7 @@ class BlockPool:
             b = self._free.pop()
             if b in self._hash_of:                      # LRU eviction
                 del self._index[self._hash_of.pop(b)]
+                self._n_cached_free -= 1
                 self._m_evictions.inc()
                 if self.on_evict is not None:
                     self.on_evict(b)
@@ -188,6 +192,7 @@ class BlockPool:
         for b in blocks:
             if self._ref[b] == 0:
                 self._free.remove(b)                    # revive, content kept
+                self._n_cached_free -= 1                # free+ref0 => cached
             self._ref[b] += 1
             self._owned[rid].append(b)
 
@@ -239,22 +244,32 @@ class BlockPool:
             if self._ref[b] == 0:
                 if b in self._hash_of:
                     self._free.appendleft(b)            # evict-last, LRU
+                    self._n_cached_free += 1
                 else:
                     self._free.append(b)                # reuse-first
         return len(blocks)
 
     def drop_cache(self) -> int:
         """Clear the prefix index entirely. Cached-free blocks become plain
-        free blocks (content forgotten); live registered blocks stay owned
-        but are no longer shareable. Returns entries dropped."""
+        free blocks — their content is forgotten, so they also move from the
+        evict-last end of the free list to the reuse-first end (there is
+        nothing left worth preserving; leaving garbage blocks parked behind
+        never-used ones would starve reuse). Live registered blocks stay
+        owned but are no longer shareable. Returns entries dropped."""
         n = len(self._index)
+        plain, forgotten = [], []
         for b in self._free:
             if b in self._hash_of:
                 self._m_evictions.inc()
                 if self.on_evict is not None:
                     self.on_evict(b)
+                forgotten.append(b)
+            else:
+                plain.append(b)
+        self._free = deque(plain + forgotten)           # forgotten: reuse-first
         self._index.clear()
         self._hash_of.clear()
+        self._n_cached_free = 0
         return n
 
     def defragment(self) -> np.ndarray:
@@ -324,3 +339,6 @@ class BlockPool:
         for b in self._hash_of:
             assert self._ref[b] > 0 or b in free_set, \
                 f"registered block {b} neither owned nor free"
+        scan = sum(1 for b in free if b in self._hash_of)
+        assert self._n_cached_free == scan, \
+            f"cached-free counter {self._n_cached_free} != scan {scan}"

@@ -14,10 +14,13 @@ Policy (one engine `step()`):
               the new table (refcount +1 per block) and the reservation is
               charged ONLY for the uncached tail + generation budget, so a
               cache hit both skips prefill compute and admits earlier.
-  2. PREFILL — run up to `prefills_per_step` prompt chunks of admitted
-              requests (chunk = `prefill_chunk` tokens) starting at the
-              first uncached token, so long prompts never block the decode
-              batch for more than one chunk.
+  2. PREFILL — pack up to `prefills_per_step` prompt chunks of admitted
+              requests (chunk = `prefill_chunk` tokens, starting at the
+              first uncached token) into ONE segment-masked device call,
+              padded to a declared (chunk-length x num-segments) bucket so
+              steady-state serving only ever hits AOT-warmed executables.
+              Long prompts never block the decode batch for more than one
+              chunk.
   3. DECODE — one batched token step over every DECODING slot.
 
 Copy-on-write rule: if the cached prefix covers the WHOLE prompt, the last
@@ -42,6 +45,48 @@ from repro.serving.engine.paged_cache import (BlockPool, BlockPoolError,
                                               prefix_hashes)
 
 WAITING, PREFILLING, DECODING, FINISHED = "waiting", "prefilling", "decoding", "finished"
+
+
+def chunk_buckets_for(prefill_chunk: int, declared=()) -> tuple:
+    """Normalize declared chunk-length buckets: sorted unique values, each in
+    (0, prefill_chunk], with prefill_chunk itself always present so every
+    chunk has a bucket. An empty declaration means one bucket of the full
+    chunk length (exactly the pre-bucket behavior)."""
+    buckets = sorted(set(int(b) for b in declared))
+    for b in buckets:
+        if not 0 < b <= prefill_chunk:
+            raise ValueError(
+                f"prefill bucket {b} outside (0, prefill_chunk="
+                f"{prefill_chunk}]")
+    if prefill_chunk not in buckets:
+        buckets.append(prefill_chunk)
+    return tuple(buckets)
+
+
+def segment_buckets_for(prefills_per_step: int, packed: bool = True) -> tuple:
+    """Segment-count buckets: powers of two below prefills_per_step plus
+    prefills_per_step itself, so the largest packed call has an exact bucket
+    and partial batches pad at most 2x. Unpacked engines only dispatch
+    G=1 calls."""
+    if not packed:
+        return (1,)
+    out, g = [], 1
+    while g < prefills_per_step:
+        out.append(g)
+        g *= 2
+    out.append(prefills_per_step)
+    return tuple(out)
+
+
+@dataclass
+class PrefillBatch:
+    """One packed prefill dispatch: up to `num_segments` prompt chunks (one
+    per request) padded to the declared (chunk_len x num_segments) bucket.
+    The engine pads missing segments with valid=0 and an out-of-range slot
+    sentinel so they never touch sequence state."""
+    segments: list                      # [(request, start, valid)]
+    chunk_len: int                      # C bucket >= every segment's valid
+    num_segments: int                   # G bucket >= len(segments)
 
 
 @dataclass
@@ -78,13 +123,20 @@ class Scheduler:
     def __init__(self, pool: BlockPool, *, max_slots: int,
                  max_blocks_per_seq: int, prefill_chunk: int,
                  prefills_per_step: int = 1, prefix_caching: bool = True,
-                 block_cost=None):
+                 block_cost=None, chunk_buckets=None, segment_buckets=None,
+                 packed_prefill: bool = True):
         self.pool = pool
         self.max_slots = max_slots
         self.max_blocks_per_seq = max_blocks_per_seq
         self.prefill_chunk = prefill_chunk
         self.prefills_per_step = prefills_per_step
         self.prefix_caching = prefix_caching
+        self.packed_prefill = packed_prefill
+        self.chunk_buckets = (tuple(chunk_buckets) if chunk_buckets
+                              else chunk_buckets_for(prefill_chunk))
+        self.segment_buckets = (
+            tuple(segment_buckets) if segment_buckets
+            else segment_buckets_for(prefills_per_step, packed_prefill))
         # per-sequence block cost: total tokens -> blocks to reserve. The
         # engine injects the provider-aware cost (max over layer state
         # kinds: full = ceil(total/bs), ring = capped at the ring length,
@@ -162,8 +214,30 @@ class Scheduler:
             self.pool.register(req.rid, row[i], req.block_hashes[i])
             req.registered += 1
 
+    def _chunk_bucket(self, valid: int) -> int:
+        """Smallest declared chunk bucket covering `valid` tokens (always
+        exists: prefill_chunk is declared and valid <= prefill_chunk)."""
+        for c in self.chunk_buckets:
+            if c >= valid:
+                return c
+        raise AssertionError(f"no chunk bucket >= {valid}")
+
+    def _segment_bucket(self, n: int) -> int:
+        """Smallest declared segment bucket covering `n` chunks (always
+        exists: prefills_per_step is declared and n <= prefills_per_step)."""
+        for g in self.segment_buckets:
+            if g >= n:
+                return g
+        raise AssertionError(f"no segment bucket >= {n}")
+
     def next_prefills(self) -> list:
-        """(request, start, valid_len) chunks to prefill this step."""
+        """PrefillBatch objects to dispatch this step. Collects up to
+        `prefills_per_step` (request, start, valid) prompt chunks, then packs
+        them all into ONE batch at the smallest declared
+        (chunk-length x num-segments) bucket — chunk_len covers the largest
+        valid in the batch, num_segments covers the chunk count. Unpacked
+        mode returns one G=1 batch per chunk (still bucket-padded, so the
+        same AOT-warmed executables serve both modes)."""
         work = []
         for req in self.running.values():
             if len(work) >= self.prefills_per_step:
@@ -172,7 +246,13 @@ class Scheduler:
                 start = req.prefilled
                 valid = min(self.prefill_chunk, req.prompt_len - start)
                 work.append((req, start, valid))
-        return work
+        if not work:
+            return []
+        if self.packed_prefill:
+            return [PrefillBatch(
+                work, self._chunk_bucket(max(v for _, _, v in work)),
+                self._segment_bucket(len(work)))]
+        return [PrefillBatch([w], self._chunk_bucket(w[2]), 1) for w in work]
 
     def decode_batch(self) -> list:
         return [r for r in self.running.values() if r.state == DECODING]
@@ -190,5 +270,9 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     def occupancy(self) -> float:
-        """Fraction of decode slots doing useful work right now."""
-        return len(self.running) / self.max_slots
+        """Fraction of slots doing useful DECODE work right now. Slots still
+        prefilling contribute nothing to the decode batch, so they are
+        excluded — this matches the engine's `engine_occupancy_sum`, which
+        accumulates decode_batch / max_slots per decode step."""
+        return sum(1 for r in self.running.values()
+                   if r.state == DECODING) / self.max_slots

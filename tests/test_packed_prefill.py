@@ -1,0 +1,322 @@
+"""Packed multi-request prefill with AOT-warmed (chunk x segments) buckets,
+plus the scheduler/pool/host-sync bugfix regressions that ride along:
+
+  * warmup compiles EXACTLY the declared bucket grid and steady-state
+    serving never adds a prefill trace key;
+  * bucket-edge cases — prompt shorter than the smallest bucket, a chunk
+    crossing a bucket boundary, a packed call mixing a fresh request with a
+    prefix-cache CoW tail — all bit-identical to `serve.generate`;
+  * packing on vs off is bit-identical for every family;
+  * `Scheduler.occupancy()` counts only DECODING slots (matches
+    `engine_occupancy_sum`);
+  * `drop_cache()` returns content-forgotten blocks to reuse-first order
+    and `num_cached_free` is an O(1) maintained counter;
+  * stop_token scanning materializes each step vector at most once and
+    `drain(max_steps=N)` runs at most N steps.
+
+All CPU. Select with `pytest -m aot_prefill` (subset of `-m serving`).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serving import serve
+from repro.serving.engine import BlockPool, Engine, EngineConfig
+from repro.serving.engine.paged_cache import prefix_hashes
+from repro.serving.engine.scheduler import (DECODING, PREFILLING,
+                                            chunk_buckets_for,
+                                            segment_buckets_for)
+
+pytestmark = [pytest.mark.serving, pytest.mark.aot_prefill]
+
+_COMMON = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+               head_dim=16, d_ff=128, vocab_size=50, loss_chunk=16,
+               attn_chunk=16, remat=False, dtype="float32")
+
+FAMILIES = ("full", "sliding", "ssm", "hybrid")
+
+
+def family_cfg(family: str) -> ModelConfig:
+    if family == "full":
+        return ModelConfig(name="pp-full", family="dense", **_COMMON)
+    if family == "sliding":
+        return ModelConfig(name="pp-sliding", family="dense",
+                           attention_type="sliding", window_size=8, **_COMMON)
+    if family == "ssm":
+        return ModelConfig(name="pp-ssm", family="ssm", ssm_type="rwkv6",
+                           ssm_head_dim=32, **_COMMON)
+    if family == "hybrid":
+        return ModelConfig(name="pp-hybrid", family="hybrid",
+                           hybrid_ssm_per_attn=1, ssm_state_dim=8,
+                           ssm_head_dim=32, **_COMMON)
+    raise ValueError(family)
+
+
+@pytest.fixture(scope="module")
+def fam_params():
+    cache = {}
+
+    def get(family):
+        if family not in cache:
+            cfg = family_cfg(family)
+            cache[family] = (cfg, T.init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[family]
+
+    return get
+
+
+def _engine(cfg, params, **kw):
+    base = dict(block_size=4, num_blocks=64, max_blocks_per_seq=16,
+                max_slots=4, prefill_chunk=8)
+    base.update(kw)
+    return Engine(cfg, params, EngineConfig(**base))
+
+
+def _ref_out(cfg, params, prompt, max_new):
+    return np.asarray(serve.generate(
+        cfg, params, jnp.asarray(prompt)[None], max_new=max_new,
+        temperature=0.0))[0]
+
+
+# ----------------------------------------------------- bucket declarations
+class TestBucketDeclaration:
+    def test_chunk_bucket_normalization(self):
+        assert chunk_buckets_for(32) == (32,)
+        assert chunk_buckets_for(32, (8, 16)) == (8, 16, 32)
+        assert chunk_buckets_for(32, (16, 8, 16)) == (8, 16, 32)
+        assert chunk_buckets_for(32, (32,)) == (32,)
+
+    def test_chunk_bucket_bounds_rejected(self):
+        with pytest.raises(ValueError, match="outside"):
+            chunk_buckets_for(32, (64,))
+        with pytest.raises(ValueError, match="outside"):
+            chunk_buckets_for(32, (0,))
+
+    def test_segment_buckets(self):
+        assert segment_buckets_for(1) == (1,)
+        assert segment_buckets_for(2) == (1, 2)
+        assert segment_buckets_for(3) == (1, 2, 3)
+        assert segment_buckets_for(4) == (1, 2, 4)
+        assert segment_buckets_for(6) == (1, 2, 4, 6)
+        assert segment_buckets_for(5, packed=False) == (1,)
+
+    def test_bucket_knobs_normalized_out_of_compile_key(self):
+        from repro.serving.engine.engine import _step_fn_key
+        assert _step_fn_key(EngineConfig(prefill_buckets=(8, 16),
+                                         packed_prefill=False)) \
+            == _step_fn_key(EngineConfig())
+
+
+# ------------------------------------------------------------- AOT warmup
+class TestAOTWarmup:
+    def test_warmup_compiles_declared_buckets_exactly(self, fam_params):
+        """`compiled_step_variants["prefill"]` equals the declared bucket
+        count right after construction, and a whole served workload adds
+        ZERO new prefill trace keys."""
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params, prefill_buckets=(2, 8),
+                      prefills_per_step=3)
+        assert eng.chunk_buckets == (2, 8)
+        assert eng.segment_buckets == (1, 2, 3)
+        declared = len(eng.prefill_grid)
+        assert declared == 6
+        assert eng.telemetry.recompiles.variants()["prefill"] == declared
+
+        rng = np.random.default_rng(0)
+        for L, mn in ((1, 4), (9, 3), (16, 2), (5, 5), (5, 5)):
+            eng.add_request(rng.integers(0, 50, size=L).astype(np.int32), mn)
+        eng.drain()
+        assert eng.telemetry.recompiles.variants()["prefill"] == declared
+        assert sum(eng.bucket_dispatches().values()) > 0
+
+    def test_unpacked_mode_also_stays_warm(self, fam_params):
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params, packed_prefill=False, prefills_per_step=2)
+        declared = len(eng.prefill_grid)
+        assert eng.segment_buckets == (1,)
+        rng = np.random.default_rng(1)
+        for L in (3, 11, 6):
+            eng.add_request(rng.integers(0, 50, size=L).astype(np.int32), 3)
+        eng.drain()
+        assert eng.telemetry.recompiles.variants()["prefill"] == declared
+
+
+# ------------------------------------------------------ packed edge cases
+class TestPackedPrefillEdges:
+    def test_prompt_shorter_than_smallest_bucket(self, fam_params):
+        """A 2-token prompt with smallest bucket 4 pads up to C=4 and stays
+        bit-identical to the oracle."""
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params, prefill_buckets=(4,))
+        rng = np.random.default_rng(2)
+        p = rng.integers(0, 50, size=2).astype(np.int32)
+        rid = eng.add_request(p, 6)
+        outs = eng.drain()
+        np.testing.assert_array_equal(outs[rid], _ref_out(cfg, params, p, 6))
+        assert eng.bucket_dispatches()[(4, 1)] == 1
+
+    def test_chunk_crossing_bucket_boundary(self, fam_params):
+        """An 11-token prompt at prefill_chunk 8 with buckets (4, 8) splits
+        into one C=8 chunk and one C=4 chunk (the 3-token tail crosses down
+        a bucket), still bit-identical."""
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params, prefill_buckets=(4, 8))
+        rng = np.random.default_rng(3)
+        p = rng.integers(0, 50, size=11).astype(np.int32)
+        rid = eng.add_request(p, 5)
+        outs = eng.drain()
+        np.testing.assert_array_equal(outs[rid], _ref_out(cfg, params, p, 5))
+        d = eng.bucket_dispatches()
+        assert d[(8, 1)] == 1 and d[(4, 1)] == 1
+
+    def test_packed_mixes_fresh_and_cow_tail(self, fam_params):
+        """One packed call carries a fully-cached request's copy-on-write
+        final-token segment (valid=1) next to a fresh request's full chunk
+        — both bit-identical, one dispatch at the G=2 bucket."""
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params, prefills_per_step=2)
+        rng = np.random.default_rng(4)
+        pa = rng.integers(0, 50, size=8).astype(np.int32)   # 2 full blocks
+        pb = rng.integers(0, 50, size=7).astype(np.int32)
+        r0 = eng.add_request(pa, 3)
+        eng.drain()                                  # prime the prefix cache
+        before = eng.bucket_dispatches()
+        ra = eng.add_request(pa, 4)                  # fully cached -> CoW
+        rb = eng.add_request(pb, 4)                  # fresh
+        eng.step()                                   # both packed together
+        assert eng.stats["cow_copies"] == 1
+        outs = eng.drain()
+        np.testing.assert_array_equal(outs[r0], _ref_out(cfg, params, pa, 3))
+        np.testing.assert_array_equal(outs[ra], _ref_out(cfg, params, pa, 4))
+        np.testing.assert_array_equal(outs[rb], _ref_out(cfg, params, pb, 4))
+        assert eng.bucket_dispatches()[(8, 2)] == before.get((8, 2), 0) + 1
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_packed_equals_unpacked_all_families(self, family, fam_params):
+        """Greedy outputs are bit-identical to `serve.generate` with packing
+        ON (multi-segment calls) and OFF (B=1 calls) for every family."""
+        cfg, params = fam_params(family)
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, 50, size=L).astype(np.int32)
+                   for L in (3, 11, 6)]
+        news = [14, 4, 9]                       # 14 > ring capacity 3*4 = 12
+        for packed in (True, False):
+            eng = _engine(cfg, params, prefills_per_step=3,
+                          packed_prefill=packed)
+            rids = [eng.add_request(p, mn) for p, mn in zip(prompts, news)]
+            outs = eng.drain()
+            for rid, p, mn in zip(rids, prompts, news):
+                np.testing.assert_array_equal(
+                    outs[rid], _ref_out(cfg, params, p, mn))
+
+
+# ------------------------------------------------- satellite bug regressions
+class TestOccupancyDecodeOnly:
+    def test_scheduler_matches_engine_metric_on_mixed_step(self, fam_params):
+        """On a step mixing one DECODING and one PREFILLING request, both
+        occupancy reports count only the decode slot."""
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params, prefill_chunk=4)
+        rng = np.random.default_rng(6)
+        eng.add_request(rng.integers(0, 50, size=3).astype(np.int32), 8)
+        eng.step()                              # request A now DECODING
+        rb = eng.add_request(rng.integers(0, 50, size=10).astype(np.int32), 4)
+        occ0 = eng.stats["occupancy_sum"]
+        eng.step()                              # B admitted, mid-prefill
+        assert eng.requests[rb].state == PREFILLING
+        step_occ = eng.stats["occupancy_sum"] - occ0
+        assert step_occ == 1 / eng.ecfg.max_slots
+        assert eng.scheduler.occupancy() == step_occ
+
+
+class TestDropCacheAndCounter:
+    def test_drop_cache_returns_blocks_reuse_first(self):
+        pool = BlockPool(8, 4)
+        keys = prefix_hashes(np.arange(8, dtype=np.int32), 4)
+        got = pool.alloc("a", 2)                # blocks [0, 1]
+        for b, k in zip(got, keys):
+            pool.register("a", b, k)
+        pool.free_seq("a")
+        assert pool.num_cached_free == 2
+        assert pool.drop_cache() == 2
+        assert pool.num_cached_free == 0
+        pool.check()
+        # content-forgotten blocks are plain garbage now: they must be
+        # handed out BEFORE never-used blocks (reuse-first), not stranded
+        # at the evict-last end
+        assert set(pool.alloc("b", 2)) == set(got)
+        pool.check()
+
+    def test_cached_free_counter_tracks_scan(self):
+        pool = BlockPool(6, 4)
+        keys = prefix_hashes(np.arange(12, dtype=np.int32), 4)
+        blocks = pool.alloc("a", 3)
+        for b, k in zip(blocks, keys):
+            pool.register("a", b, k)
+        pool.free_seq("a")
+        pool.check()
+        assert pool.num_cached_free == 3
+        pool.share("b", [blocks[0]])            # revive off the free list
+        pool.check()
+        assert pool.num_cached_free == 2
+        pool.alloc("c", 4)                      # 3 plain + 1 LRU eviction
+        pool.check()
+        assert pool.num_cached_free == 1
+        assert pool.stats["evictions"] == 1
+        pool.free_seq("b")                      # still registered -> cached
+        pool.check()
+        assert pool.num_cached_free == 2
+        pool.drop_cache()
+        pool.check()
+        assert pool.num_cached_free == 0
+
+
+class TestHostSyncAndDrain:
+    def test_stop_token_syncs_once_per_step_vector(self, fam_params):
+        """Three stop_token requests prefilled in ONE packed call and decoded
+        in lockstep materialize each step vector exactly once: 1 prefill
+        vector + 1 per decode step, not one transfer per request."""
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params, prefills_per_step=4, prefix_caching=False)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, 50, size=5).astype(np.int32)
+                   for _ in range(3)]
+        mn = 6
+        rids = [eng.add_request(p, mn, stop_token=49_999) for p in prompts]
+        outs = eng.drain()
+        syncs = eng.telemetry.registry.get(
+            "engine_step_vector_syncs_total").value
+        assert syncs == 1 + eng.stats["decode_steps"]
+        assert eng.stats["decode_steps"] == mn - 1
+        for rid, p in zip(rids, prompts):
+            np.testing.assert_array_equal(
+                outs[rid], _ref_out(cfg, params, p, mn))
+
+    def test_stop_token_still_stops(self, fam_params):
+        """The memoized path still honors the stop token."""
+        cfg, params = fam_params("full")
+        rng = np.random.default_rng(8)
+        p = rng.integers(0, 50, size=4).astype(np.int32)
+        ref = _ref_out(cfg, params, p, 12)
+        stop = int(ref[3])                      # force a mid-stream stop
+        eng = _engine(cfg, params)
+        rid = eng.add_request(p, 12, stop_token=stop)
+        out = eng.drain()[rid]
+        assert out.shape[0] <= 12
+        assert out[-1] == stop
+        np.testing.assert_array_equal(out, ref[:out.shape[0]])
+
+    def test_drain_runs_at_most_max_steps(self, fam_params):
+        cfg, params = fam_params("full")
+        eng = _engine(cfg, params)
+        rng = np.random.default_rng(9)
+        eng.add_request(rng.integers(0, 50, size=4).astype(np.int32), 50)
+        calls = []
+        orig = eng.step
+        eng.step = lambda: (calls.append(1), orig())[1]
+        with pytest.raises(RuntimeError, match="did not converge"):
+            eng.drain(max_steps=3)
+        assert len(calls) == 3
