@@ -1,14 +1,17 @@
 """Benchmark harness (deliverable (d)): one module per paper table/figure.
 Prints `name,us_per_call,derived` CSV rows.
 
-`--serving-workload mixed|shared|both` is passed through to
-benchmarks.serving_bench (shared = the prefix-caching comparison); the mixed
-workload's rows include the packed-prefill TTFT p50/p99 vs the B=1 chunked
-baseline, the per-(chunk x segments) AOT-bucket dispatch counts, and the
-prefill variants seen-vs-declared check (new=0 after warmup).
-`--serving-family full|sliding|ssm|hybrid|all` adds the per-family
-state-provider sweep; `--serving-trace-out PREFIX` writes each workload's
-request-lifecycle event log to PREFIX.<workload>.jsonl (replayable via
+`--serving-workload mixed|shared|oversub|both` is passed through to
+benchmarks.serving_bench (shared = the prefix-caching comparison, oversub =
+the open-loop overload study: optimistic admission + preemption vs full
+reservation); the mixed workload's rows include the packed-prefill TTFT
+p50/p99 vs the B=1 chunked baseline, the per-(chunk x segments) AOT-bucket
+dispatch counts, and the prefill variants seen-vs-declared check (new=0
+after warmup). `--serving-family full|sliding|ssm|hybrid|all` adds the
+per-family state-provider sweep; `--serving-seed` seeds every serving
+workload generator (request lengths, arrival trace);
+`--serving-trace-out PREFIX` writes each workload's request-lifecycle event
+log to PREFIX.<workload>.jsonl (replayable via
 repro.serving.telemetry.replay_jsonl)."""
 import argparse
 import sys
@@ -34,7 +37,7 @@ MODULES = [
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--serving-workload",
-                    choices=("mixed", "shared", "both", "none"),
+                    choices=("mixed", "shared", "oversub", "both", "none"),
                     default="both", help="workload(s) for serving_bench")
     ap.add_argument("--serving-family",
                     choices=("full", "sliding", "ssm", "hybrid", "all"),
@@ -42,13 +45,16 @@ def main(argv=None) -> None:
                     help="per-family state-provider sweep for serving_bench")
     ap.add_argument("--serving-trace-out", default=None, metavar="PREFIX",
                     help="JSONL request-trace prefix for serving_bench")
+    ap.add_argument("--serving-seed", type=int, default=0,
+                    help="workload-generator seed for serving_bench")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
     for mod_name in MODULES:
         kwargs = ({"workload": args.serving_workload,
                    "config_family": args.serving_family,
-                   "trace_out": args.serving_trace_out}
+                   "trace_out": args.serving_trace_out,
+                   "seed": args.serving_seed}
                   if mod_name == "benchmarks.serving_bench" else {})
         try:
             mod = __import__(mod_name, fromlist=["main"])

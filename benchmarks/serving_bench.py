@@ -39,14 +39,27 @@ vs declared AOT buckets, where "new=0" certifies the warmup compiled every
 variant steady-state serving dispatches. The per-family sweep also reports
 the total number of distinct compiled step variants (recompile tracker).
 
-`main(workload=...)` accepts "mixed" | "shared" | "both";
-`benchmarks/run.py --serving-workload` passes it through
-(`--serving-family` likewise forwards the family sweep). `--trace-out
-PREFIX` writes each workload's synced-pass event log to
-`PREFIX.<workload>.jsonl` — replayable into per-request TTFT/decode
-timelines via `repro.serving.telemetry.replay_jsonl`.
+Workload `oversub` — the open-loop overload study (ROADMAP item 2): Poisson
+arrivals at 2x the engine's decode capacity with heavy-tailed prompt/output
+lengths and a priority mix (`repro.serving.workloads.open_loop_arrivals`),
+replayed through BOTH schedulers — optimistic admission + victim preemption
+(`OversubConfig`) vs. conservative up-front full reservation. Rows: goodput
+(completed tokens/s) for each, the goodput ratio (headline number in the
+deterministic step domain — tokens per fixed-shape engine step — with the
+noisier wall-clock ratio alongside), preemption/resume rates, and p99
+TTFT/TPOT from a synced pass of the optimistic engine. This is the
+tail-latency-under-oversubscription measurement the paper's concurrency
+analysis calls for: the mean survives overload, the p99 is what collapses.
+
+`main(workload=...)` accepts "mixed" | "shared" | "oversub" | "both" (all
+three); `benchmarks/run.py --serving-workload` passes it through
+(`--serving-family` likewise forwards the family sweep, `--serving-seed`
+the workload seed). `--trace-out PREFIX` writes each workload's synced-pass
+event log to `PREFIX.<workload>.jsonl` — replayable into per-request
+TTFT/decode timelines via `repro.serving.telemetry.replay_jsonl`.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -58,7 +71,8 @@ from repro.configs.base import ModelConfig
 from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import serve
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving import workloads as W
+from repro.serving.engine import Engine, EngineConfig, OversubConfig
 
 FAMILIES = ("full", "sliding", "ssm", "hybrid")
 
@@ -89,31 +103,7 @@ def _family_cfg(family):
     raise ValueError(f"unknown family {family!r}")
 
 
-def _workload(n=24, seed=0):
-    rng = np.random.default_rng(seed)
-    lens = rng.integers(4, 32, size=n)
-    news = np.where(rng.random(n) < 0.3, rng.integers(48, 96, size=n),
-                    rng.integers(8, 24, size=n))
-    prompts = [rng.integers(0, 256, size=int(l)).astype(np.int32) for l in lens]
-    return prompts, [int(m) for m in news]
-
-
 MAX_SLOTS = 8
-
-
-def _workload_shared(n=24, seed=0, prefix_len=96):
-    """Shared-prefix traffic: one common system prompt + short unique
-    suffixes, short generations (prefill-dominated — the prefix-cache
-    sweet spot)."""
-    rng = np.random.default_rng(seed)
-    prefix = rng.integers(0, 256, size=prefix_len).astype(np.int32)
-    prompts, news = [], []
-    for _ in range(n):
-        tail = rng.integers(0, 256,
-                            size=int(rng.integers(4, 17))).astype(np.int32)
-        prompts.append(np.concatenate([prefix, tail]))
-        news.append(int(rng.integers(8, 17)))
-    return prompts, news, prefix
 
 
 def _fresh_engine(cfg, params, prompts, *, prefix_caching=True, prime=None,
@@ -135,46 +125,54 @@ def _fresh_engine(cfg, params, prompts, *, prefix_caching=True, prime=None,
     return eng, skip
 
 
+@dataclasses.dataclass
+class EngineRun:
+    """One engine measurement pass. `latencies` is None for throughput
+    runs (free-running steps) and a per-token wall-time array for synced
+    runs (`collect_latency=True`)."""
+    tokens: int
+    wall: float
+    occupancy: float
+    prefix_hits: int
+    latencies: object
+    engine: object
+    skip: set
+
+
 def _run_engine(cfg, params, prompts, max_news, *, prefix_caching=True,
-                prime=None, telemetry=True):
-    """Throughput pass: free-running steps, one sync at the end. Warmup and
-    cache-priming tokens/steps are excluded from every reported number."""
+                prime=None, telemetry=True, packed_prefill=True,
+                collect_latency=False) -> EngineRun:
+    """One driver for both measurement modes. Throughput pass
+    (`collect_latency=False`): free-running steps, one sync at the end, so
+    the host-ahead pipeline is measured. Latency pass: `step_timing=True`
+    and a block on each step's emitted tokens, so per-step wall time — and
+    the engine's own request-lifecycle timestamps (TTFT, queue wait) — are
+    device-completion times, not async dispatch. Warmup and cache-priming
+    tokens/steps are excluded from every reported number."""
     eng, skip = _fresh_engine(cfg, params, prompts,
                               prefix_caching=prefix_caching, prime=prime,
-                              telemetry=telemetry)
+                              telemetry=telemetry,
+                              step_timing=collect_latency,
+                              packed_prefill=packed_prefill)
     warm = dict(eng.stats)
     for p, mn in zip(prompts, max_news):
         eng.add_request(p, mn)
+    lat = [] if collect_latency else None
     t0 = time.perf_counter()
+    if collect_latency:
+        while eng.scheduler.has_work:
+            s = time.perf_counter()
+            emitted = eng.step()
+            jax.block_until_ready(eng.next_tok)
+            lat.extend([time.perf_counter() - s] * len(emitted))
     outs = eng.drain()                             # materializes every token
     wall = time.perf_counter() - t0
     total = sum(o.shape[0] for rid, o in outs.items() if rid not in skip)
     occ = ((eng.stats["occupancy_sum"] - warm["occupancy_sum"])
            / max(eng.stats["decode_steps"] - warm["decode_steps"], 1))
     hits = eng.stats["prefix_hit_tokens"] - warm["prefix_hit_tokens"]
-    return total, wall, occ, hits
-
-
-def _run_engine_latency(cfg, params, prompts, max_news, *,
-                        prefix_caching=True, prime=None, packed_prefill=True):
-    """Latency pass: block on each step's emitted tokens so per-step wall
-    time reflects device completion, not async dispatch. Runs with
-    `step_timing=True`, so the engine's own request-lifecycle timestamps
-    (TTFT, queue wait) are completion times too — returns the engine for
-    telemetry readout alongside the per-token latencies."""
-    eng, skip = _fresh_engine(cfg, params, prompts,
-                              prefix_caching=prefix_caching, prime=prime,
-                              step_timing=True, packed_prefill=packed_prefill)
-    for p, mn in zip(prompts, max_news):
-        eng.add_request(p, mn)
-    lat = []
-    while eng.scheduler.has_work:
-        s = time.perf_counter()
-        emitted = eng.step()
-        jax.block_until_ready(eng.next_tok)
-        dt = time.perf_counter() - s
-        lat.extend([dt] * len(emitted))
-    return np.asarray(lat), eng, skip
+    return EngineRun(total, wall, occ, hits,
+                     None if lat is None else np.asarray(lat), eng, skip)
 
 
 def _lifecycle_percentiles(eng, skip):
@@ -262,19 +260,21 @@ def _run_legacy_loop(cfg, params, prompts, max_news):
     return useful, wall
 
 
-def _main_mixed(cfg, params, trace_out=None):
-    prompts, max_news = _workload()
+def _main_mixed(cfg, params, trace_out=None, seed=0):
+    prompts, max_news = W.mixed_workload(seed=seed)
 
-    total, wall, occ, _hits = _run_engine(cfg, params, prompts, max_news)
+    thr = _run_engine(cfg, params, prompts, max_news)
+    total, wall, occ = thr.tokens, thr.wall, thr.occupancy
     tps_engine = total / wall
-    total_o, wall_o, _occ, _h = _run_engine(cfg, params, prompts, max_news,
-                                            telemetry=False)
+    off = _run_engine(cfg, params, prompts, max_news, telemetry=False)
+    total_o, wall_o = off.tokens, off.wall
     tps_off = total_o / wall_o
     useful, wall_legacy = _run_legacy(cfg, params, prompts, max_news)
     tps_legacy = useful / wall_legacy
     useful_l, wall_loop = _run_legacy_loop(cfg, params, prompts, max_news)
     tps_loop = useful_l / wall_loop
-    lat, eng_lat, skip = _run_engine_latency(cfg, params, prompts, max_news)
+    sync = _run_engine(cfg, params, prompts, max_news, collect_latency=True)
+    lat, eng_lat, skip = sync.latencies, sync.engine, sync.skip
 
     emit("serving_engine_tokens_per_s", wall / total * 1e6, f"{tps_engine:.1f}")
     emit("serving_telemetry_off_tokens_per_s", wall_o / total_o * 1e6,
@@ -292,8 +292,9 @@ def _main_mixed(cfg, params, trace_out=None):
     _emit_prefill_variants("mixed", eng_lat)
     # packed-prefill TTFT vs. the B=1 chunked baseline (same synced-pass
     # methodology, packing off => one G=1 bucket-padded call per chunk)
-    _lat_u, eng_unp, skip_u = _run_engine_latency(
-        cfg, params, prompts, max_news, packed_prefill=False)
+    unp = _run_engine(cfg, params, prompts, max_news, packed_prefill=False,
+                      collect_latency=True)
+    eng_unp, skip_u = unp.engine, unp.skip
     ttft_p, _w = _lifecycle_percentiles(eng_lat, skip)
     ttft_u, _w = _lifecycle_percentiles(eng_unp, skip_u)
     for q in (50, 99):
@@ -312,17 +313,20 @@ def _main_mixed(cfg, params, trace_out=None):
     emit("serving_speedup_vs_legacy_loop", None, f"{tps_engine / tps_loop:.2f}x")
 
 
-def _main_shared(cfg, params, trace_out=None):
-    prompts, max_news, prefix = _workload_shared()
+def _main_shared(cfg, params, trace_out=None, seed=0):
+    prompts, max_news, prefix = W.shared_prefix_workload(seed=seed)
     prompt_tokens = sum(p.shape[0] for p in prompts)
 
-    total_c, wall_c, _occ, hits = _run_engine(
-        cfg, params, prompts, max_news, prefix_caching=True, prime=prefix)
-    total_n, wall_n, _occ, _h = _run_engine(
-        cfg, params, prompts, max_news, prefix_caching=False, prime=prefix)
+    cache = _run_engine(cfg, params, prompts, max_news, prefix_caching=True,
+                        prime=prefix)
+    total_c, wall_c, hits = cache.tokens, cache.wall, cache.prefix_hits
+    nocache = _run_engine(cfg, params, prompts, max_news, prefix_caching=False,
+                          prime=prefix)
+    total_n, wall_n = nocache.tokens, nocache.wall
     tps_cache, tps_nocache = total_c / wall_c, total_n / wall_n
-    _lat, eng_lat, skip = _run_engine_latency(
-        cfg, params, prompts, max_news, prefix_caching=True, prime=prefix)
+    sync = _run_engine(cfg, params, prompts, max_news, prefix_caching=True,
+                       prime=prefix, collect_latency=True)
+    eng_lat, skip = sync.engine, sync.skip
 
     emit("serving_prefix_cache_tokens_per_s", wall_c / total_c * 1e6,
          f"{tps_cache:.1f}")
@@ -337,7 +341,7 @@ def _main_shared(cfg, params, trace_out=None):
     _emit_prefill_variants("shared", eng_lat)
 
 
-def _main_family(family):
+def _main_family(family, seed=0):
     """One model family through the engine: tokens/s, per-slot state memory
     (from the family's providers), and peak block-pool utilization."""
     cfg = _family_cfg(family)
@@ -345,7 +349,7 @@ def _main_family(family):
     ecfg = EngineConfig(block_size=8, num_blocks=128, max_blocks_per_seq=16,
                         max_slots=MAX_SLOTS, prefill_chunk=16,
                         prefills_per_step=2)
-    prompts, max_news = _workload(n=16, seed=4)
+    prompts, max_news = W.mixed_workload(n=16, seed=seed + 4)
 
     def run():
         eng = Engine(cfg, params, ecfg)
@@ -380,25 +384,136 @@ def _main_family(family):
     _emit_prefill_variants(f"family_{family}", eng)
 
 
-def main(workload: str = "both", config_family: str = None, trace_out=None):
-    if workload not in ("mixed", "shared", "both", "none"):
+OV_BLOCKS = 24       # tight pool: 384 KV tokens for up to 8 x 256-token seqs
+
+
+def _ov_cfg():
+    """The overload study runs a larger model than the closed-loop rows:
+    the goodput gap between schedulers is a decode-occupancy gap, visible in
+    wall time only when the per-step model compute dominates the per-token
+    host bookkeeping both engines share."""
+    return ModelConfig(name="serving-ov", family="dense", num_layers=4,
+                       d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+                       d_ff=1024, vocab_size=256, loss_chunk=64,
+                       attn_chunk=128, remat=False, dtype="float32")
+
+
+def _ov_ecfg(oversub):
+    """Engine config for the overload study. The pool is deliberately small
+    relative to worst-case demand (8 slots x 16 blocks = 128 >> 24 blocks)
+    and to the mean full reservation (~5 blocks x 8 slots), so up-front
+    reservation is pool-bound at ~4-5 concurrent requests while optimistic
+    admission keeps all 8 slots decoding and preempts on actual exhaustion."""
+    return EngineConfig(block_size=16, num_blocks=OV_BLOCKS,
+                        max_blocks_per_seq=16, max_slots=MAX_SLOTS,
+                        prefill_chunk=32, prefills_per_step=4,
+                        oversub=oversub)
+
+
+def _run_open_loop(cfg, params, arrivals, ecfg, *, synced=False):
+    """Replay an open-loop arrival trace: admit every arrival whose step has
+    come, step the engine, repeat. Arrivals never wait for completions —
+    under overload the waiting queue grows and the scheduler must cope.
+    Returns (tokens, wall, steps, engine, skip)."""
+    if synced:
+        ecfg = dataclasses.replace(ecfg, step_timing=True)
+    eng = Engine(cfg, params, ecfg)
+    skip = {eng.add_request(arrivals[0].prompt[:4], 2)}   # decode warmup
+    eng.drain()
+    i, step = 0, 0
+    t0 = time.perf_counter()
+    while i < len(arrivals) or eng.scheduler.has_work:
+        while i < len(arrivals) and arrivals[i].step <= step:
+            a = arrivals[i]
+            eng.add_request(a.prompt, a.max_new, priority=a.priority)
+            i += 1
+        if eng.scheduler.has_work:
+            eng.step()
+            if synced:
+                jax.block_until_ready(eng.next_tok)
+            step += 1
+        else:
+            step = arrivals[i].step                        # idle: fast-forward
+    outs = eng.drain()
+    wall = time.perf_counter() - t0
+    tokens = sum(o.shape[0] for rid, o in outs.items() if rid not in skip)
+    return tokens, wall, step, eng, skip
+
+
+def _main_oversub(trace_out=None, seed=0):
+    cfg = _ov_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    arrivals = W.open_loop_arrivals(
+        48, seed=seed, overload=2.0, max_slots=MAX_SLOTS, prompt_mean=12.0,
+        prompt_max=32, out_mean=64.0, out_max=224)
+    n = len(arrivals)
+
+    tok_o, wall_o, steps_o, eng_o, _s = _run_open_loop(
+        cfg, params, arrivals, _ov_ecfg(OversubConfig()))
+    tok_f, wall_f, steps_f, eng_f, _s = _run_open_loop(
+        cfg, params, arrivals, _ov_ecfg(None))
+    gp_o, gp_f = tok_o / wall_o, tok_f / wall_f
+
+    emit("serving_oversub_goodput_tokens_per_s", wall_o / tok_o * 1e6,
+         f"{gp_o:.1f}")
+    emit("serving_fullres_goodput_tokens_per_s", wall_f / tok_f * 1e6,
+         f"{gp_f:.1f}")
+    # same trace, same total work — the gap is pure scheduling, so the
+    # headline ratio is measured in the step domain (engine steps have fixed
+    # shapes and near-constant cost, and the count is deterministic given
+    # (seed, params)); the wall-clock view rides along in the derived text
+    emit("serving_oversub_goodput_ratio", None,
+         f"{(tok_o / steps_o) / (tok_f / steps_f):.2f}x "
+         f"(steps; wall {gp_o / gp_f:.2f}x)")
+    emit("serving_oversub_tokens_per_step", None, f"{tok_o / steps_o:.2f}")
+    emit("serving_fullres_tokens_per_step", None, f"{tok_f / steps_f:.2f}")
+    st = eng_o.stats
+    emit("serving_oversub_preempts_per_request", None,
+         f"{st['preemptions'] / n:.3f}")
+    emit("serving_oversub_resumes", None, str(st["resumes"]))
+    emit("serving_oversub_block_appends", None, str(st["block_appends"]))
+
+    # tail latencies from a synced pass of the optimistic engine: per-step
+    # blocking makes every lifecycle timestamp a device-completion time
+    _t, _w, _n, eng_s, skip_s = _run_open_loop(
+        cfg, params, arrivals, _ov_ecfg(OversubConfig()), synced=True)
+    _emit_lifecycle("oversub", eng_s, skip_s, trace_out)
+    tpots = []
+    for rid in eng_s.requests:
+        if rid in skip_s:
+            continue
+        tl = eng_s.telemetry.request_timeline(rid)
+        if tl["first_token"] is not None and tl["decode_tokens"]:
+            toks = [tl["first_token"]] + tl["decode_tokens"]
+            tpots.append((toks[-1] - toks[0]) / (len(toks) - 1))
+    for q in (50, 99):
+        emit(f"serving_oversub_tpot_p{q}",
+             float(np.percentile(tpots, q)) * 1e6)
+
+
+def main(workload: str = "both", config_family: str = None, trace_out=None,
+         seed: int = 0):
+    if workload not in ("mixed", "shared", "oversub", "both", "none"):
         raise ValueError(f"unknown workload {workload!r}")
     if workload != "none":
         cfg = _cfg()
         params = T.init_params(cfg, jax.random.PRNGKey(0))
         if workload in ("mixed", "both"):
-            _main_mixed(cfg, params, trace_out)
+            _main_mixed(cfg, params, trace_out, seed)
         if workload in ("shared", "both"):
-            _main_shared(cfg, params, trace_out)
+            _main_shared(cfg, params, trace_out, seed)
+        if workload in ("oversub", "both"):
+            _main_oversub(trace_out, seed)
     if config_family:
         fams = FAMILIES if config_family == "all" else (config_family,)
         for fam in fams:
-            _main_family(fam)
+            _main_family(fam, seed)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("mixed", "shared", "both", "none"),
+    ap.add_argument("--workload",
+                    choices=("mixed", "shared", "oversub", "both", "none"),
                     default="both")
     ap.add_argument("--config-family",
                     choices=FAMILIES + ("all",), default=None,
@@ -407,5 +522,7 @@ if __name__ == "__main__":
                     help="write each workload's synced-pass event log to "
                          "PREFIX.<workload>.jsonl (replay via "
                          "repro.serving.telemetry.replay_jsonl)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload-generator seed (arrival trace, lengths)")
     args = ap.parse_args()
-    main(args.workload, args.config_family, args.trace_out)
+    main(args.workload, args.config_family, args.trace_out, args.seed)

@@ -6,11 +6,15 @@ replay wave then shows prefix caching: repeated prompts alias their cached
 KV blocks and skip most of prefill, with bit-identical outputs. The engine's
 telemetry is read out along the way: per-request lifecycle timelines (TTFT,
 queue wait), the compiled-step-variant count, a JSONL trace export replayed
-back into the same timelines, and a Prometheus-format metric snapshot. A
-final hybrid-config wave smokes the per-layer state providers end to end: a
-zamba2-style mamba2+shared-attention model served through the same engine
-(recurrent slabs + paged KV behind one block table), bit-identical to
-`serve.generate`.
+back into the same timelines, and a Prometheus-format metric snapshot. An
+oversubscription wave then serves the same requests through an optimistic
+engine (prompt-only admission, on-demand decode-block growth) and forces a
+mid-flight preemption: the victim's prefix is registered in the cache, the
+request is evicted and later resumed, and its greedy output stays
+bit-identical. A final hybrid-config wave smokes the per-layer state
+providers end to end: a zamba2-style mamba2+shared-attention model served
+through the same engine (recurrent slabs + paged KV behind one block
+table), bit-identical to `serve.generate`.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -28,7 +32,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.optim import make_optimizer
 from repro.serving import serve
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, OversubConfig
 from repro.train import trainer
 
 
@@ -126,6 +130,39 @@ def main():
     print("prometheus snapshot excerpt:")
     for line in picks[:6]:
         print(f"  {line}")
+
+    # oversubscription wave: an optimistic engine admits with only its prompt
+    # blocks reserved and appends decode blocks on demand; forcing a
+    # preemption mid-flight exercises the full victim rollback — prefix
+    # registered in the cache, request evicted, then resumed from the cached
+    # prefix with bit-identical greedy output
+    ov = Engine(cfg, state["params"],
+                EngineConfig(block_size=8, num_blocks=24, max_blocks_per_seq=8,
+                             max_slots=4, prefill_chunk=16,
+                             oversub=OversubConfig()))
+    ov_rids, ov_refs = [], []
+    for b, kp in enumerate(keeps):
+        p = test["tokens"][b, :half + kp]
+        ov_rids.append(ov.add_request(p, max_new=kp, priority=b % 2))
+        ref = serve.generate(cfg, state["params"], jnp.asarray(p)[None],
+                             max_new=kp, temperature=0.0)
+        ov_refs.append(np.asarray(ref)[0])
+    for _ in range(3):
+        ov.step()
+    forced = next(r for r in ov_rids if ov.preempt_request(r))
+    ov_outs = ov.drain()
+    for r, ref in zip(ov_rids, ov_refs):
+        np.testing.assert_array_equal(ov_outs[r], ref)
+    tl = ov.telemetry.request_timeline(forced)
+    print(f"engine oversubscription wave x{len(ov_rids)}: "
+          f"{ov.stats['block_appends']} on-demand block appends, "
+          f"{ov.stats['preemptions']} preemption(s), "
+          f"{ov.stats['resumes']} resume(s), outputs bit-identical")
+    print(f"  request {forced} was evicted mid-flight and resumed: "
+          f"{tl['preempts']} preempt/resume cycle(s), "
+          f"{tl['preempted_s'] * 1e3:.2f} ms out of the batch")
+    assert ov.stats["preemptions"] >= 1 and ov.stats["resumes"] >= 1
+    assert ov.block_pool.num_free == 24, "oversub engine leaked KV blocks"
 
     # hybrid wave: mamba2 layers carry O(1) recurrent slabs, the shared
     # attention layer pages KV — the same engine serves both behind one

@@ -32,6 +32,20 @@ The provider protocol splits along the host/device boundary:
     (block aliasing is only sound for full-attention KV, whose content is a
     pure function of the token prefix).
 
+Preemption (engine.oversub) adds a rollback protocol. Eviction is always
+recompute-by-re-prefill, and each provider contributes what makes that
+cheap or exact:
+
+  * paged ``full`` KV — nothing to checkpoint: the freed blocks themselves
+    carry the rollback (fully written ones are prefix-registered before the
+    free, so resume aliases them back from the cached-free list).
+  * ``ring`` KV — the write cursor is a pure function of the token count
+    (``write_cursor``); re-prefilling the same tokens lands every position
+    at the identical (page, offset), wrap-for-wrap.
+  * recurrent slabs — ``supports_snapshot_resume``: ``preempt_checkpoint``
+    gathers the victim's slot rows to host, ``resume_restore`` scatters
+    them back, letting a pure-recurrent config skip the re-scan entirely.
+
 ``layer_kinds`` / ``superblock_layout`` live here (not in transformer.py) so
 both the model dispatchers and the engine derive the SAME static kind list
 from a ModelConfig without an import cycle.
@@ -116,6 +130,16 @@ class _PagedPoolProvider:
     block_size: int
     max_blocks_per_seq: Optional[int] = None
 
+    # Preemption rollback: paged KV is rolled back by freeing blocks (and
+    # re-aliasing registered ones on resume); there is no slot snapshot.
+    supports_snapshot_resume = False
+
+    def preempt_checkpoint(self, state, slot: int):
+        return None
+
+    def resume_restore(self, state, slot: int, snap):
+        return state
+
     def init_layer_state(self):
         hkv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
         dt = L.dtype_of(self.cfg)
@@ -171,6 +195,13 @@ class RingKVProvider(_PagedPoolProvider):
     def max_tokens(self) -> Optional[int]:
         return None  # the ring wraps: any length fits in ring_pages blocks
 
+    def write_cursor(self, seq_len: int) -> dict:
+        """Where token `seq_len` will be written: a pure function of the
+        token count, which is WHY ring preemption needs no snapshot — the
+        re-prefill of the same tokens reproduces the ring wrap-for-wrap."""
+        return {"page": (seq_len // self.block_size) % self.ring_pages,
+                "offset": seq_len % self.block_size}
+
 
 @dataclass(frozen=True)
 class RecurrentSlabProvider:
@@ -183,6 +214,7 @@ class RecurrentSlabProvider:
     kind: str                         # "rwkv" | "mamba"
 
     supports_prefix_caching = False
+    supports_snapshot_resume = True   # O(1) state: checkpoint beats re-scan
 
     def _spec(self):
         if self.kind == "rwkv":
@@ -207,6 +239,17 @@ class RecurrentSlabProvider:
 
     def defrag_remap(self, state, perm):
         return state  # slot-indexed, block moves don't touch it
+
+    def preempt_checkpoint(self, state, slot: int):
+        """Host snapshot of one slot's recurrent state. Leaves are
+        (n_sb, max_slots, ...) — slot axis 1."""
+        return jax.tree.map(lambda a: np.asarray(a[:, slot]), state)
+
+    def resume_restore(self, state, slot: int, snap):
+        """Scatter a ``preempt_checkpoint`` snapshot back into `slot` (the
+        engine zeroes the slot first via reset, so restore is a plain set)."""
+        return jax.tree.map(
+            lambda a, s: a.at[:, slot].set(jnp.asarray(s)), state, snap)
 
 
 # ----------------------------------------------------------------- assembly

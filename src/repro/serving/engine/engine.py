@@ -73,9 +73,11 @@ from repro.core import parallelism as par
 from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import telemetry as TM
+from repro.serving.engine.oversub import OversubConfig, SLOPolicy
 from repro.serving.engine.paged_cache import BlockPool
-from repro.serving.engine.scheduler import (DECODING, FINISHED, Request,
-                                            Scheduler, chunk_buckets_for,
+from repro.serving.engine.scheduler import (DECODING, FINISHED, PREFILLING,
+                                            Request, Scheduler,
+                                            chunk_buckets_for,
                                             segment_buckets_for)
 
 
@@ -95,6 +97,9 @@ class EngineConfig:
     prefill_buckets: tuple = ()         # chunk-length buckets; () = one
                                         #   bucket of prefill_chunk tokens
     packed_prefill: bool = True         # pack chunks into one prefill call
+    oversub: Optional[OversubConfig] = None   # optimistic admission + victim
+                                        #   preemption (engine.oversub);
+                                        #   None = conservative reservation
 
     def __post_init__(self):
         # keep the config hashable for the compiled-step cache even when a
@@ -170,7 +175,8 @@ def _step_fn_key(e: EngineConfig) -> EngineConfig:
     compile-cache key and toggling them reuses the compiled steps."""
     return dataclasses.replace(e, prefix_caching=True, prefills_per_step=1,
                                telemetry=True, step_timing=False,
-                               prefill_buckets=(), packed_prefill=True)
+                               prefill_buckets=(), packed_prefill=True,
+                               oversub=None)
 
 
 @functools.lru_cache(maxsize=None)
@@ -234,6 +240,16 @@ class Engine:
         self._m_step_syncs = reg.counter(
             "engine_step_vector_syncs_total",
             "step vectors materialized on host for stop_token scanning")
+        self._m_preempts = reg.counter(
+            "engine_preemptions_total", "victims evicted and rolled back")
+        self._m_resumes = reg.counter(
+            "engine_resumes_total", "preempted requests re-admitted")
+        self._m_appends = reg.counter(
+            "engine_block_appends_total",
+            "blocks appended on demand to decoding sequences")
+        self._m_prefill_deferrals = reg.counter(
+            "engine_prefill_deferrals_total",
+            "steps that skipped prefill under SLO/pool pressure")
         self._g_waiting = reg.gauge(
             "engine_waiting_requests", "requests queued awaiting admission")
         self._g_running = reg.gauge(
@@ -267,6 +283,19 @@ class Engine:
                 f"engine_prefill_bucket_c{c}g{g}_dispatch_total",
                 f"prefill dispatches at chunk bucket {c} x {g} segments")
             for c, g in self.prefill_grid}
+        # oversubscription: the SLO policy flips the scheduler to optimistic
+        # prompt-only reservation; the engine then appends decode blocks per
+        # step and preempts victims when an append (or a higher-priority
+        # queue head) can't be satisfied. Snapshot resume is sound only when
+        # EVERY provider can restore from a snapshot (pure-recurrent
+        # configs); hybrids recompute — the attention KV must be rebuilt
+        # anyway and the slab prefill scan rebuilds recurrent state exactly.
+        self._policy = SLOPolicy(e.oversub) if e.oversub is not None else None
+        self._snapshot_resume = (
+            e.oversub is not None and e.oversub.snapshot_resume
+            and self._has_recurrent
+            and all(getattr(p, "supports_snapshot_resume", False)
+                    for p in self.providers))
         self.scheduler = Scheduler(
             self.block_pool, max_slots=e.max_slots,
             max_blocks_per_seq=e.max_blocks_per_seq,
@@ -276,7 +305,8 @@ class Engine:
             block_cost=self.blocks_needed,
             chunk_buckets=self.chunk_buckets,
             segment_buckets=self.segment_buckets,
-            packed_prefill=e.packed_prefill)
+            packed_prefill=e.packed_prefill,
+            policy=self._policy)
 
         # device-resident slot state (touched from the host only at request
         # lifecycle events; the decode loop never reads it back)
@@ -333,7 +363,10 @@ class Engine:
                 "emitted": self._m_emitted.value,
                 "occupancy_sum": self._m_occupancy.value,
                 "prefix_hit_tokens": self._m_prefix_hits.value,
-                "cow_copies": self._m_cow.value}
+                "cow_copies": self._m_cow.value,
+                "preemptions": self._m_preempts.value,
+                "resumes": self._m_resumes.value,
+                "block_appends": self._m_appends.value}
 
     def bucket_dispatches(self) -> dict:
         """Serving-time prefill dispatch counts per declared (chunk_len,
@@ -347,8 +380,11 @@ class Engine:
         return SP.seq_blocks_needed(self.providers, total_tokens)
 
     def add_request(self, prompt, max_new: int, *, temperature: float = 0.0,
-                    key=None, stop_token: Optional[int] = None) -> int:
+                    key=None, stop_token: Optional[int] = None,
+                    priority: int = 0) -> int:
         """Queue a request; returns its id. `prompt`: 1-D int tokens.
+        `priority` is the oversubscription class (LOWER is more important;
+        ignored by the conservative scheduler).
 
         Validates up front that prompt + generation budget fits both the
         per-sequence block table and the whole pool, so infeasible requests
@@ -380,7 +416,8 @@ class Engine:
         self._next_rid += 1
         req = Request(
             rid=rid, prompt=prompt, max_new=max_new, temperature=temperature,
-            key=key, stop_token=stop_token)
+            key=key, stop_token=stop_token, priority=priority,
+            arrive_t=self.telemetry.clock())
         self.requests[rid] = req
         self.scheduler.submit(req)
         self.telemetry.record(rid, "arrive", prompt_len=int(prompt.shape[0]),
@@ -405,22 +442,44 @@ class Engine:
 
     def step(self) -> list:
         """One engine iteration: admit -> prefill chunk(s) -> batched decode.
-        Returns the rids that emitted a token this step (token values are
-        materialized lazily — read them via `drain()` / `output()`)."""
+        Under oversubscription the order becomes: priority preemption ->
+        (policy-gated) admit + prefill -> per-sequence block growth (with
+        victim preemption on append failure) -> batched decode. Returns the
+        rids that emitted a token this step (token values are materialized
+        lazily — read them via `drain()` / `output()`)."""
         e = self.ecfg
         tel = self.telemetry
         emitted = []
         self._step_device_s = 0.0
         t_step = tel.clock() if tel.step_timing else 0.0
+        t_wall = tel.clock() if self._policy is not None else 0.0
         n_prefills = 0
         sync_memo = {}                  # one host transfer per step vector
 
-        for req in self.scheduler.admit():
+        pol = self._policy
+        if pol is not None and pol.cfg.priority_preemption:
+            self._priority_preempt()
+        allow_prefill = True
+        if pol is not None:
+            head_wait = None
+            if self.scheduler.waiting:
+                head = self.scheduler.waiting[0]
+                if head.arrive_t is not None:
+                    head_wait = pol.clock() - head.arrive_t
+            decoding = sum(1 for r in self.scheduler.running.values()
+                           if r.state == DECODING)
+            allow_prefill = pol.allow_prefill(
+                head_wait_s=head_wait, decoding=decoding,
+                pool_util=self.block_pool.utilization)
+            if not allow_prefill:
+                self._m_prefill_deferrals.inc()
+
+        admitted = self.scheduler.admit() if allow_prefill else []
+        for req in admitted:
             row = self.block_pool.table(req.rid)
             padded = np.zeros((e.max_blocks_per_seq,), np.int32)
             padded[:len(row)] = row
             self.tables = self.tables.at[req.slot].set(jnp.asarray(padded))
-            self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
             if self._has_recurrent:
                 # the slot's recurrent slab rows still hold the previous
                 # occupant's final state — zero them for the newcomer
@@ -428,26 +487,44 @@ class Engine:
                     "engine/reset_slot", self._reset_slot,
                     self.pool_state, jnp.int32(req.slot))
             self._m_prefix_hits.inc(req.prefilled)
+            resumed = req.preempts > 0
             if tel.enabled:
-                t_admit = tel.record(req.rid, "admit", slot=req.slot)
-                t_arrive = tel.tracer.first(req.rid, "arrive")
-                if t_arrive is not None:
-                    self._h_queue_wait.observe(t_admit - t_arrive)
+                t_admit = tel.record(req.rid, "resume" if resumed else "admit",
+                                     slot=req.slot)
+                if not resumed:
+                    t_arrive = tel.tracer.first(req.rid, "arrive")
+                    if t_arrive is not None:
+                        self._h_queue_wait.observe(t_admit - t_arrive)
                 if req.prefilled:
                     tel.record(req.rid, "prefix_hit", tokens=req.prefilled,
                                blocks=req.shared_blocks
                                + (1 if req.cow_src is not None else 0))
+            if resumed:
+                self._m_resumes.inc()
+            if req.snapshot is not None and self._snapshot_resume:
+                # pure-recurrent resume: scatter the checkpointed slab rows
+                # back into the (freshly zeroed) slot and skip the re-scan —
+                # prefill only covers the tokens past the snapshot
+                self.pool_state = {
+                    f"l{i}": p.resume_restore(
+                        self.pool_state[f"l{i}"], req.slot, req.snapshot[i])
+                    for i, p in enumerate(self.providers)}
+                req.prefilled = req.snapshot_len
+            req.snapshot = None
+            req.snapshot_len = 0
+            self.seq_lens = self.seq_lens.at[req.slot].set(req.prefilled)
             if req.cow_src is not None:
-                # whole prompt cached: copy the last matched block into the
+                # whole prefill cached: copy the last matched block into the
                 # private block at its table position, then re-prefill only
-                # the final prompt token there (yields the first-token logits)
-                dst = row[req.prompt_len // e.block_size - 1]
+                # the final token there (yields the first-token logits)
+                dst = row[req.prefill_len // e.block_size - 1]
                 self.pool_state = self._device_call(
                     "engine/copy_block", self._copy_block,
                     self.pool_state, jnp.int32(req.cow_src), jnp.int32(dst))
                 self._m_cow.inc()
 
-        for batch in self.scheduler.next_prefills():
+        for batch in (self.scheduler.next_prefills() if allow_prefill
+                      else []):
             # one segment-masked device call per batch: segment j carries
             # request j's chunk, padded to the (C, G) bucket; missing
             # segments get valid=0 and the out-of-range slot sentinel
@@ -457,7 +534,7 @@ class Engine:
             valids = np.zeros((G,), np.int32)
             slots = np.full((G,), e.max_slots, np.int32)
             for j, (req, start, valid) in enumerate(batch.segments):
-                tokens[j, :valid] = req.prompt[start:start + valid]
+                tokens[j, :valid] = req.prefill_src[start:start + valid]
                 starts[j], valids[j], slots[j] = start, valid, req.slot
             greedy, logits, self.pool_state = self._device_call(
                 "engine/prefill", self._prefill,
@@ -472,20 +549,28 @@ class Engine:
                 self._m_prefill_chunks.inc()
                 n_prefills += 1
                 tel.record(req.rid, "prefill_chunk", start=start, tokens=valid)
-                if req.prefilled == req.prompt_len:
-                    # prompt complete: segment j's logits yield token #1
+                if req.prefilled == req.prefill_len:
+                    # prefill complete: segment j's logits yield the next
+                    # token (the request's FIRST, unless this is a resumed
+                    # re-prefill continuing an interrupted generation)
                     self._record_token(req, greedy, j, logits, j, sync_memo)
                     emitted.append(req.rid)
                     if tel.enabled:
-                        t_first = tel.record(req.rid, "first_token")
-                        t_arrive = tel.tracer.first(req.rid, "arrive")
-                        if t_arrive is not None:
-                            self._h_ttft.observe(t_first - t_arrive)
+                        if req.got_first:
+                            tel.record(req.rid, "decode_token")
+                        else:
+                            t_first = tel.record(req.rid, "first_token")
+                            t_arrive = tel.tracer.first(req.rid, "arrive")
+                            if t_arrive is not None:
+                                self._h_ttft.observe(t_first - t_arrive)
+                    req.got_first = True
                     req.state = DECODING
                     self.active = self.active.at[req.slot].set(True)
                     if req.done:
                         self._finish(req)
 
+        if pol is not None:
+            self._grow_decode()
         batch = self.scheduler.decode_batch()
         if batch:
             greedy, logits, self.seq_lens, self.pool_state = self._device_call(
@@ -514,6 +599,8 @@ class Engine:
                     host_s=total - self._step_device_s,
                     device_s=self._step_device_s, prefills=n_prefills,
                     decode_batch=len(batch), emitted=len(emitted))
+        if pol is not None:
+            pol.note_step(tel.clock() - t_wall)
         return emitted
 
     def drain(self, max_steps: int = 100_000) -> dict:
@@ -569,6 +656,88 @@ class Engine:
             tables[req.slot, :len(row)] = row
         self.tables = jnp.asarray(tables)
         return src
+
+    # -------------------------------------------------- preemption internals
+    def _grow_decode(self) -> None:
+        """Optimistic growth: append the block(s) each decoding sequence's
+        next KV write needs, strongest request first (the policy's
+        protection order). When the pool can't satisfy an append, preempt
+        strictly-WEAKER victims until it can — and if none exist, the
+        growing request itself is the weakest and rolls back. The maximal
+        request is never victimized while anything weaker runs, so progress
+        is guaranteed (its full span fits the pool, validated at submit)."""
+        sched = self.scheduler
+        order = sorted(sched.decode_batch(), key=SLOPolicy.protection_key)
+        for req in order:
+            if req.rid not in sched.running:
+                continue                # became a victim earlier this pass
+            need = sched.growth_need(req)
+            if need == 0:
+                continue
+            while not self.block_pool.can_alloc(need):
+                me = SLOPolicy.protection_key(req)
+                victim = self._policy.pick_victim(
+                    [r for r in sched.running.values()
+                     if r is not req and SLOPolicy.protection_key(r) > me])
+                self._preempt(victim if victim is not None else req)
+                if victim is None:
+                    break
+            if req.rid in sched.running:
+                fresh = sched.grow(req)
+                old = len(self.block_pool.table(req.rid)) - len(fresh)
+                self.tables = self.tables.at[
+                    req.slot, old:old + len(fresh)].set(
+                        jnp.asarray(fresh, jnp.int32))
+                self._m_appends.inc(len(fresh))
+
+    def _priority_preempt(self) -> None:
+        """A blocked queue head may evict strictly-lower-class victims: while
+        the head cannot be admitted and such a victim runs, preempt the
+        weakest one. Equal-or-higher-class work is never disturbed, so this
+        terminates and never inverts the class order."""
+        sched = self.scheduler
+        while sched.waiting and not sched.can_admit_head():
+            head = sched.waiting[0]
+            victim = self._policy.pick_victim(
+                list(sched.running.values()), max_priority=head.priority)
+            if victim is None:
+                return
+            self._preempt(victim)
+
+    def _preempt(self, req: Request) -> None:
+        """Evict one running request and roll it back to WAITING. Host-side
+        order matters: materialize its lazy token refs (the step vectors are
+        unreachable after the slot turns over), snapshot recurrent slabs if
+        every provider supports restore, deactivate the slot, then let the
+        scheduler register + free its blocks and requeue it. Materialization
+        uses a private memo: this call drops the victim's step-vector refs,
+        so a shared id()-keyed memo could dangle for the rest of the step."""
+        req.out_tokens = [int(t) for t in self._materialize(req, {})]
+        if self._snapshot_resume:
+            # state covers exactly the tokens processed as inputs so far:
+            # seq_tokens - 1 while DECODING (the last generated token is the
+            # pending input), prefilled while mid-prefill
+            req.snapshot = [
+                p.preempt_checkpoint(self.pool_state[f"l{i}"], req.slot)
+                for i, p in enumerate(self.providers)]
+            req.snapshot_len = (req.seq_tokens - 1 if req.state == DECODING
+                                else req.prefilled)
+        self.active = self.active.at[req.slot].set(False)
+        blocks = len(self.block_pool.table(req.rid))
+        self.scheduler.preempt(req)
+        self._m_preempts.inc()
+        self.telemetry.record(req.rid, "preempt",
+                              generated=len(req.out_tokens), blocks=blocks)
+
+    def preempt_request(self, rid: int) -> bool:
+        """Force-preempt one running request (test/ops hook — the soak tests
+        drive every request through at least one evict/resume cycle with
+        this). Returns False if the request isn't currently running."""
+        req = self.requests[rid]
+        if req.state not in (PREFILLING, DECODING):
+            return False
+        self._preempt(req)
+        return True
 
     # ------------------------------------------------------------- internal
     def _record_token(self, req: Request, greedy_vec, greedy_idx,

@@ -140,8 +140,14 @@ class BlockPool:
     def admit_feasible(self, shared: list, n_fresh: int) -> bool:
         """Can a request alias `shared` (possibly reviving cached-free
         blocks) AND still allocate `n_fresh` fresh blocks?"""
-        revived = sum(1 for b in shared if self._ref[b] == 0)
-        return n_fresh <= len(self._free) - revived
+        return n_fresh <= len(self._free) - self.revive_count(shared)
+
+    def revive_count(self, shared: list) -> int:
+        """How many of `shared` are cached-FREE (would be revived off the
+        free list by `share`, consuming free capacity) as opposed to live.
+        Admission policies need the split: revived blocks count against the
+        free list but carry content, fresh blocks are the true new demand."""
+        return sum(1 for b in shared if self._ref[b] == 0)
 
     def table(self, rid) -> list:
         """Ordered block ids of a sequence (logical page i -> physical id)."""
@@ -172,6 +178,23 @@ class BlockPool:
             got.append(b)
         self._owned.setdefault(rid, []).extend(got)
         return got
+
+    def append(self, rid, n_blocks: int) -> list:
+        """On-demand growth: append `n_blocks` fresh blocks to an EXISTING
+        sequence (the oversubscription per-step decode append). Unlike
+        `alloc` this never creates an owner — growing a sequence the pool
+        has never seen is a bookkeeping bug, not a request."""
+        if rid not in self._owned:
+            raise BlockPoolError(f"append to unknown sequence {rid!r}")
+        return self.alloc(rid, n_blocks)
+
+    def evict_seq(self, rid) -> int:
+        """Victim eviction: release every block of a preempted sequence.
+        Identical accounting to `free_seq` — callers register the victim's
+        fully written prefix blocks FIRST, so refcount-zero registered
+        blocks park on the cold end of the free list content-intact and the
+        victim's resume can alias them back instead of recomputing."""
+        return self.free_seq(rid)
 
     def share(self, rid, blocks: list) -> None:
         """Alias existing blocks into `rid`'s table (refcount +1 each).

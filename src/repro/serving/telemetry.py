@@ -51,13 +51,16 @@ import jax
 import numpy as np
 
 # Canonical request-lifecycle event names, in lifecycle order. ``evict`` and
-# ``defrag`` are pool-wide events recorded with ``rid=None``.
+# ``defrag`` are pool-wide events recorded with ``rid=None``. ``preempt`` /
+# ``resume`` bracket an oversubscription rollback: the victim's state is
+# evicted and it re-enters the prefill phase on resume, so the rank machine
+# in ``validate_order`` resets at each ``resume``.
 EVENTS = ("arrive", "admit", "prefix_hit", "prefill_chunk", "first_token",
-          "decode_token", "evict", "defrag", "finish")
+          "decode_token", "preempt", "resume", "evict", "defrag", "finish")
 
-_LIFECYCLE_RANK = {"arrive": 0, "admit": 1, "prefix_hit": 2,
+_LIFECYCLE_RANK = {"arrive": 0, "admit": 1, "resume": 1, "prefix_hit": 2,
                    "prefill_chunk": 3, "first_token": 4, "decode_token": 5,
-                   "finish": 6}
+                   "preempt": 6, "finish": 7}
 _ONCE = ("arrive", "admit", "first_token", "finish")
 
 
@@ -284,10 +287,16 @@ class RequestTracer:
 def derive_timeline(events) -> dict:
     """Fold one request's event stream into its derived timeline: TTFT =
     ``first_token - arrive``, queue wait = ``admit - arrive``, end-to-end =
-    ``finish - arrive``, plus the per-token decode timeline."""
+    ``finish - arrive``, the per-token decode timeline, and the preemption
+    view — ``preempts`` (rollback count) and ``preempted_s`` (total time
+    spent evicted, summed over matched preempt→resume pairs; a stream that
+    ends while still evicted contributes its open interval up to the last
+    event's timestamp)."""
     tl = {"events": list(events), "arrive": None, "admit": None,
           "first_token": None, "finish": None, "prefill_chunks": 0,
-          "decode_tokens": [], "prefix_hit_tokens": 0}
+          "decode_tokens": [], "prefix_hit_tokens": 0,
+          "preempts": 0, "preempted_s": 0.0}
+    pend = None                        # open preempt awaiting its resume
     for ev in events:
         if ev.name in _ONCE and tl[ev.name] is None:
             tl[ev.name] = ev.t
@@ -296,7 +305,18 @@ def derive_timeline(events) -> dict:
         elif ev.name == "decode_token":
             tl["decode_tokens"].append(ev.t)
         elif ev.name == "prefix_hit":
-            tl["prefix_hit_tokens"] = (ev.data or {}).get("tokens", 0)
+            # cumulative over resumes: a rollback's re-admission usually
+            # re-aliases the blocks registered at preemption
+            tl["prefix_hit_tokens"] += (ev.data or {}).get("tokens", 0)
+        elif ev.name == "preempt":
+            tl["preempts"] += 1
+            pend = ev.t
+        elif ev.name == "resume":
+            if pend is not None:
+                tl["preempted_s"] += ev.t - pend
+                pend = None
+    if pend is not None and events:
+        tl["preempted_s"] += events[-1].t - pend
     for key, a, b in (("queue_wait", "arrive", "admit"),
                       ("ttft", "arrive", "first_token"),
                       ("e2e", "arrive", "finish")):
@@ -309,7 +329,15 @@ def validate_order(events) -> None:
     """Assert one request's lifecycle invariants: timestamps never regress,
     arrive ≤ admit ≤ (prefix_hit | prefill_chunk)* ≤ first_token ≤
     decode_token* ≤ finish, and the one-shot events occur at most once.
-    Raises ``TelemetryError`` with the offending pair."""
+
+    Preemption segments the stream: ``preempt`` is legal any time after
+    ``admit``, nothing but ``resume`` may follow it (the request is evicted
+    — though a stream may END evicted), and ``resume`` resets the rank
+    floor so the request re-runs prefix_hit / prefill_chunk / decode_token
+    phases; ``resume`` without an open ``preempt`` is an error. One-shot
+    events stay globally one-shot across segments (``first_token`` fires in
+    whichever segment first completes prefill). Raises ``TelemetryError``
+    with the offending pair."""
     if not events:
         raise TelemetryError("empty event stream")
     names = [e.name for e in events]
@@ -320,19 +348,37 @@ def validate_order(events) -> None:
         raise TelemetryError(f"stream starts with {names[0]!r}, not 'arrive'")
     if "finish" in names and names[-1] != "finish":
         raise TelemetryError("events recorded after 'finish'")
+    floor = _LIFECYCLE_RANK["arrive"]
+    evicted = False
     prev = events[0]
     for ev in events[1:]:
         if ev.t < prev.t:
             raise TelemetryError(
                 f"timestamp regression: {prev.name}@{prev.t} -> "
                 f"{ev.name}@{ev.t}")
-        a, b = _LIFECYCLE_RANK.get(prev.name), _LIFECYCLE_RANK.get(ev.name)
-        if a is None or b is None:
-            raise TelemetryError(
-                f"unknown lifecycle event {prev.name!r} / {ev.name!r}")
-        if b < a:
-            raise TelemetryError(
-                f"lifecycle order violated: {prev.name!r} before {ev.name!r}")
+        rank = _LIFECYCLE_RANK.get(ev.name)
+        if rank is None:
+            raise TelemetryError(f"unknown lifecycle event {ev.name!r}")
+        if evicted:
+            if ev.name != "resume":
+                raise TelemetryError(
+                    f"{ev.name!r} recorded while evicted (preempt without "
+                    f"resume)")
+            evicted = False
+            floor = rank                       # segment restart: rank resets
+        elif ev.name == "resume":
+            raise TelemetryError("'resume' without a preceding 'preempt'")
+        elif ev.name == "preempt":
+            if floor < _LIFECYCLE_RANK["admit"]:
+                raise TelemetryError("'preempt' before 'admit'")
+            evicted = True
+            floor = rank
+        else:
+            if rank < floor:
+                raise TelemetryError(
+                    f"lifecycle order violated: {prev.name!r} before "
+                    f"{ev.name!r}")
+            floor = rank
         prev = ev
 
 

@@ -1,0 +1,115 @@
+"""Synthetic serving workloads: closed-loop request mixes and an open-loop
+arrival process for overload studies.
+
+The closed-loop generators (`mixed_workload`, `shared_prefix_workload`) are
+the standing benchmark traffic shapes: chat-shaped mixed lengths, and a
+common system-prompt prefix with unique suffixes (the prefix-cache sweet
+spot). They hand the driver a complete request list to submit up front —
+throughput under a drained backlog.
+
+`open_loop_arrivals` models the regime the paper's tail-latency analysis
+warns about (Keuper & Pfreundt: under oversubscription it is the p99, not
+the mean, that collapses): requests arrive by a Poisson process the server
+cannot push back on, prompt and output lengths are heavy-tailed
+(lognormal), and a small fraction of traffic is higher priority. Arrival
+times are in ENGINE-STEP units: the engine emits at most one token per slot
+per step and the decode step cost is constant (fixed shapes + masking), so
+offered load in tokens/step against a capacity of ``max_slots`` tokens/step
+defines the overload factor directly — ``rate * mean(max_new) =
+overload * max_slots``. The driver admits every arrival whose step has
+come, steps the engine, and repeats; the queue is open-loop because
+arrivals never wait for completions.
+
+All generators are seeded and pure: one rng per call, no global state, so
+a (seed, params) pair reproduces the byte-identical trace — the
+oversubscription benchmark replays ONE trace through both the optimistic
+and the full-reservation engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["Arrival", "mixed_workload", "shared_prefix_workload",
+           "open_loop_arrivals"]
+
+
+def mixed_workload(n: int = 24, seed: int = 0, vocab: int = 256):
+    """Chat-shaped mixed lengths: short prompts (4-31 tokens), skewed
+    generation budgets (70% short 8-23, 30% long 48-95). Returns
+    (prompts, max_news)."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(4, 32, size=n)
+    news = np.where(rng.random(n) < 0.3, rng.integers(48, 96, size=n),
+                    rng.integers(8, 24, size=n))
+    prompts = [rng.integers(0, vocab, size=int(l)).astype(np.int32)
+               for l in lens]
+    return prompts, [int(m) for m in news]
+
+
+def shared_prefix_workload(n: int = 24, seed: int = 0, prefix_len: int = 96,
+                           vocab: int = 256):
+    """Shared-prefix traffic: one common system prompt + short unique
+    suffixes, short generations (prefill-dominated — the prefix-cache
+    sweet spot). Returns (prompts, max_news, prefix)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+    prompts, news = [], []
+    for _ in range(n):
+        tail = rng.integers(0, vocab,
+                            size=int(rng.integers(4, 17))).astype(np.int32)
+        prompts.append(np.concatenate([prefix, tail]))
+        news.append(int(rng.integers(8, 17)))
+    return prompts, news, prefix
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One open-loop request: submit `prompt` for `max_new` tokens at
+    priority `priority` once the engine reaches step `step`."""
+    step: int
+    prompt: np.ndarray
+    max_new: int
+    priority: int
+
+
+def _lognormal_len(rng, mean: float, lo: int, hi: int, sigma: float) -> int:
+    """Heavy-tailed length with the requested mean: lognormal keeps a long
+    right tail (the occasional huge request that ties resources up) while
+    most draws sit well below the mean."""
+    mu = np.log(mean) - 0.5 * sigma * sigma   # E[lognormal(mu, s)] = mean
+    return int(np.clip(round(rng.lognormal(mu, sigma)), lo, hi))
+
+
+def open_loop_arrivals(n: int, *, seed: int = 0, overload: float = 2.0,
+                       max_slots: int = 8, prompt_mean: float = 12.0,
+                       prompt_max: int = 32, out_mean: float = 24.0,
+                       out_max: int = 96, sigma: float = 0.7,
+                       hi_priority_frac: float = 0.2,
+                       vocab: int = 256) -> list:
+    """Poisson arrivals at `overload` times the engine's decode capacity.
+
+    The arrival rate in requests/step is ``overload * max_slots /
+    out_mean`` — each request will eventually demand ~`out_mean` decode
+    tokens and the engine can emit at most `max_slots` tokens/step, so
+    `overload` > 1 means the offered token load exceeds what decode can
+    drain and a backlog must form. Prompt/output lengths are lognormal
+    (heavy-tailed) with the given means; `hi_priority_frac` of requests are
+    class 0 (interactive), the rest class 1 (batch). Returns Arrivals
+    sorted by step."""
+    if overload <= 0:
+        raise ValueError(f"overload must be positive, got {overload}")
+    rng = np.random.default_rng(seed)
+    rate = overload * max_slots / out_mean          # requests per step
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        prompt_len = _lognormal_len(rng, prompt_mean, 1, prompt_max, sigma)
+        out.append(Arrival(
+            step=int(t),
+            prompt=rng.integers(0, vocab, size=prompt_len).astype(np.int32),
+            max_new=_lognormal_len(rng, out_mean, 1, out_max, sigma),
+            priority=0 if rng.random() < hi_priority_frac else 1))
+    return out

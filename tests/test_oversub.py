@@ -1,0 +1,457 @@
+"""Oversubscription subsystem: optimistic admission, on-demand block growth,
+victim preemption, SLO-aware scheduling — plus the preempt/resume telemetry
+rules and a BlockPool append/evict property harness.
+
+The load-bearing guarantee is bit-identical greedy output across forced
+preemption: a preempted request re-prefills ``prompt + generated`` over the
+identical KV (or restores a recurrent-slab snapshot), so the continuation
+argmaxes exactly as the never-preempted run. The soak tests force every
+request through at least one evict/resume cycle per model family and diff
+against ``serve.generate``.
+
+All CPU. Select with `pytest -m oversub` (subset of `-m serving`).
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serving import serve
+from repro.serving.engine import (BlockPool, Engine, EngineConfig,
+                                  OversubConfig, SLOPolicy, prefix_hashes)
+from repro.serving.engine.scheduler import DECODING, Request
+from repro.serving.telemetry import (Event, TelemetryError, derive_timeline,
+                                     validate_order)
+
+pytestmark = [pytest.mark.serving, pytest.mark.oversub]
+
+
+# ------------------------------------------------------------------ SLOPolicy
+def _req(rid, priority=0, generated=0):
+    r = Request(rid=rid, prompt=np.zeros(4, np.int32), max_new=8,
+                priority=priority)
+    r.out_tokens = [0] * generated
+    return r
+
+
+class TestSLOPolicy:
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            OversubConfig(admit_watermark=0.0)
+        with pytest.raises(ValueError):
+            OversubConfig(admit_watermark=1.5)
+        with pytest.raises(ValueError):
+            OversubConfig(step_ewma=0.0)
+
+    def test_protection_total_order(self):
+        """Strongest first: class, then invested work, then age — and
+        victim_order is its exact reverse."""
+        reqs = [_req(0, priority=1, generated=5),
+                _req(1, priority=0, generated=0),
+                _req(2, priority=1, generated=9),
+                _req(3, priority=1, generated=9)]
+        by_protection = sorted(reqs, key=SLOPolicy.protection_key)
+        assert [r.rid for r in by_protection] == [1, 2, 3, 0]
+        assert [r.rid for r in SLOPolicy.victim_order(reqs)] == [0, 3, 2, 1]
+
+    def test_pick_victim_priority_filter(self):
+        pol = SLOPolicy(OversubConfig())
+        reqs = [_req(0, priority=0), _req(1, priority=1, generated=3),
+                _req(2, priority=1)]
+        # unrestricted: weakest overall (class 1, least invested, youngest)
+        assert pol.pick_victim(reqs).rid == 2
+        # a class-0 head may only evict STRICTLY weaker classes
+        assert pol.pick_victim(reqs, max_priority=0).rid == 2
+        # a class-1 head finds no strictly-weaker victim
+        assert pol.pick_victim(reqs, max_priority=1) is None
+        assert pol.pick_victim([], max_priority=None) is None
+
+    def test_may_admit_watermark(self):
+        pol = SLOPolicy(OversubConfig(admit_watermark=0.9))
+        pool = BlockPool(10, 4)
+        pool.alloc("a", 6)                       # util 0.6, 4 free
+        assert pol.may_admit(pool, 2, 0, running=1)        # 8 used <= 9
+        assert pol.may_admit(pool, 2, 1, running=1)        # 9 used <= 9
+        assert not pol.may_admit(pool, 4, 0, running=1)    # 10 used > 9
+        assert not pol.may_admit(pool, 5, 0, running=1)    # doesn't even fit
+        assert not pol.may_admit(pool, 5, 0, running=0)    # idle can't conjure
+        assert pol.may_admit(pool, 4, 0, running=0)        # idle bypass
+
+    def test_note_step_ewma(self):
+        pol = SLOPolicy(OversubConfig(step_ewma=0.5))
+        assert pol.step_ewma_s is None
+        pol.note_step(0.1)
+        assert pol.step_ewma_s == pytest.approx(0.1)
+        pol.note_step(0.3)
+        assert pol.step_ewma_s == pytest.approx(0.2)
+
+    def test_allow_prefill_rules(self):
+        pol = SLOPolicy(OversubConfig(ttft_slo_s=0.5, tpot_slo_s=0.05))
+        # nothing decoding: always prefill (deferring would deadlock)
+        assert pol.allow_prefill(head_wait_s=None, decoding=0, pool_util=0.99)
+        # pool over the watermark: decode-only
+        assert not pol.allow_prefill(head_wait_s=0.01, decoding=2,
+                                     pool_util=0.95)
+        # ... unless the queue head is past the TTFT target
+        assert pol.allow_prefill(head_wait_s=0.6, decoding=2, pool_util=0.95)
+        # TPOT pressure defers prefill
+        pol.note_step(0.2)
+        assert not pol.allow_prefill(head_wait_s=0.01, decoding=2,
+                                     pool_util=0.1)
+        assert pol.allow_prefill(head_wait_s=0.6, decoding=2, pool_util=0.1)
+        # healthy: prefill through
+        calm = SLOPolicy(OversubConfig())
+        calm.note_step(0.001)
+        assert calm.allow_prefill(head_wait_s=0.01, decoding=2, pool_util=0.5)
+
+
+# -------------------------------------------- pool append/evict property test
+@pytest.mark.parametrize("seed", range(120))
+def test_blockpool_append_evict_episode(seed):
+    """Seeded randomized episodes of the oversubscription pool life:
+    optimistic admit (small alloc), per-step append, register-then-evict
+    victim rollback, and cached-prefix revival — `BlockPool.check()` plus
+    shadow tables after every operation."""
+    rng = random.Random(seed)
+    bs = rng.choice([2, 4])
+    num_blocks = rng.choice([8, 12, 16])
+    pool = BlockPool(num_blocks, bs)
+    owners = {}                                   # rid -> expected table
+    tokens = {}                                   # rid -> token stream
+    base = [rng.randrange(5) for _ in range(3 * bs)]
+    next_rid = 0
+
+    for _ in range(rng.randint(40, 80)):
+        op = rng.random()
+        if op < 0.35:                             # optimistic admit
+            keep = rng.randrange(0, 3 * bs + 1)
+            tail = [rng.randrange(5) for _ in range(rng.randint(1, bs))]
+            toks = base[:keep] + tail
+            hashes = prefix_hashes(np.asarray(toks, np.int32), bs)
+            matched = pool.match_prefix(hashes)
+            if matched and len(matched) * bs == len(toks):
+                matched = matched[:-1]            # CoW rule: keep a tail
+            need = pool.blocks_for(len(toks) + 1)  # prompt + first write
+            if pool.admit_feasible(matched, need - len(matched)):
+                assert pool.revive_count(matched) == sum(
+                    1 for b in matched if pool._ref[b] == 0)
+                rid = next_rid
+                next_rid += 1
+                if matched:
+                    pool.share(rid, matched)
+                fresh = pool.alloc(rid, need - len(matched))
+                owners[rid] = list(matched) + fresh
+                tokens[rid] = toks
+                row = pool.table(rid)
+                for i in range(len(matched), len(hashes)):
+                    pool.register(rid, row[i], hashes[i])
+        elif op < 0.65 and owners:                # decode growth: append
+            rid = rng.choice(sorted(owners))
+            n = rng.randint(1, 2)
+            if pool.can_alloc(n):
+                fresh = pool.append(rid, n)
+                assert len(fresh) == n
+                owners[rid].extend(fresh)
+                tokens[rid] = tokens[rid] + [rng.randrange(5)
+                                             for _ in range(n * bs)]
+            else:
+                with pytest.raises(Exception):
+                    pool.append(rid, n)
+        elif op < 0.90 and owners:                # victim: register then evict
+            rid = rng.choice(sorted(owners))
+            hashes = prefix_hashes(np.asarray(tokens[rid], np.int32), bs)
+            row = pool.table(rid)
+            for i, h in zip(range(len(row)), hashes):
+                pool.register(rid, row[i], h)     # first writer wins / no-op
+            pool.evict_seq(rid)
+            del owners[rid], tokens[rid]
+            with pytest.raises(Exception):        # double-evict raises
+                pool.evict_seq(rid)
+        else:                                     # error probes
+            with pytest.raises(Exception):
+                pool.append("no-such-seq", 1)     # append needs an owner
+            with pytest.raises(Exception):
+                pool.alloc("probe", pool.num_free + 1)
+            assert "probe" not in pool._owned
+
+        pool.check()
+        for rid, expect in owners.items():
+            assert pool.table(rid) == expect
+        assert (pool.num_free
+                == num_blocks - len({b for t in owners.values() for b in t}))
+
+    for rid in sorted(owners):
+        pool.evict_seq(rid)
+    pool.drop_cache()
+    pool.check()
+    assert pool.num_free == num_blocks
+
+
+# --------------------------------------------------- telemetry lifecycle rules
+def _stream(*names, t0=0.0):
+    return [Event(t0 + i, 1, n, None) for i, n in enumerate(names)]
+
+
+class TestPreemptTelemetryRules:
+    def test_preempt_resume_cycle_valid(self):
+        validate_order(_stream(
+            "arrive", "admit", "prefill_chunk", "first_token", "decode_token",
+            "preempt", "resume", "prefix_hit", "prefill_chunk", "decode_token",
+            "finish"))
+
+    def test_stream_may_end_evicted(self):
+        validate_order(_stream("arrive", "admit", "first_token", "preempt"))
+
+    def test_nothing_but_resume_after_preempt(self):
+        with pytest.raises(TelemetryError):
+            validate_order(_stream("arrive", "admit", "first_token",
+                                   "preempt", "decode_token"))
+
+    def test_resume_without_preempt_rejected(self):
+        with pytest.raises(TelemetryError):
+            validate_order(_stream("arrive", "admit", "resume"))
+
+    def test_preempt_before_admit_rejected(self):
+        with pytest.raises(TelemetryError):
+            validate_order(_stream("arrive", "preempt"))
+
+    def test_first_token_stays_one_shot_across_segments(self):
+        with pytest.raises(TelemetryError):
+            validate_order(_stream(
+                "arrive", "admit", "first_token", "preempt", "resume",
+                "prefill_chunk", "first_token"))
+
+    def test_derived_preempted_time(self):
+        tl = derive_timeline(_stream(
+            "arrive", "admit", "first_token", "preempt", "resume",
+            "decode_token", "preempt", "resume", "finish"))
+        assert tl["preempts"] == 2
+        assert tl["preempted_s"] == pytest.approx(2.0)   # two 1s gaps
+        open_tl = derive_timeline(_stream(
+            "arrive", "admit", "preempt"))               # ends evicted
+        assert open_tl["preempts"] == 1
+
+
+# ------------------------------------------------------------------- fixtures
+def _model_cfg(family):
+    base = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=50, loss_chunk=16,
+                attn_chunk=16, remat=False, dtype="float32")
+    if family == "full":
+        return ModelConfig(name="ov-full", family="dense", **base)
+    if family == "sliding":
+        return ModelConfig(name="ov-sliding", family="dense",
+                           attention_type="sliding", window_size=4, **base)
+    if family == "ssm":
+        return ModelConfig(name="ov-ssm", family="ssm", ssm_type="rwkv6",
+                           ssm_head_dim=16, **base)
+    if family == "hybrid":
+        return ModelConfig(name="ov-hybrid", family="hybrid",
+                           hybrid_ssm_per_attn=1, ssm_state_dim=8,
+                           ssm_head_dim=16, **base)
+    raise ValueError(family)
+
+
+@pytest.fixture(scope="module", params=["full", "sliding", "ssm", "hybrid"])
+def fam_setup(request):
+    cfg = _model_cfg(request.param)
+    return request.param, cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **kw):
+    base = dict(block_size=4, num_blocks=64, max_blocks_per_seq=8,
+                max_slots=4, prefill_chunk=8, oversub=OversubConfig())
+    base.update(kw)
+    return Engine(cfg, params, EngineConfig(**base))
+
+
+def _ref(cfg, params, prompt, max_new):
+    return np.asarray(serve.generate(cfg, params, jnp.asarray(prompt)[None],
+                                     max_new=max_new, temperature=0.0))[0]
+
+
+def _prompts(n, seed=0, lo=3, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 50, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+# --------------------------------------------------- forced-preemption soak
+class TestForcedPreemptionSoak:
+    def test_every_request_evicted_once_bit_identical(self, fam_setup):
+        """Each request is force-preempted at a different decode depth, then
+        the engine drains: greedy outputs must match `serve.generate`
+        bit-for-bit, and every telemetry stream must satisfy the segmented
+        lifecycle rules. (ssm runs the snapshot-restore path; sliding and
+        hybrid recompute by re-prefill; full re-aliases its registered
+        blocks.)"""
+        family, cfg, params = fam_setup
+        eng = _engine(cfg, params)
+        prompts, max_new = _prompts(4, seed=1), 10
+        rids = [eng.add_request(p, max_new) for p in prompts]
+        pending = list(rids)
+        steps = 0
+        while pending and steps < 200:
+            eng.step()
+            steps += 1
+            for rid in list(pending):
+                req = eng.requests[rid]
+                # vary eviction depth: rid k falls after k+1 generated tokens
+                depth = rids.index(rid) + 1
+                if req.state == DECODING and len(req.out_tokens) >= depth:
+                    assert eng.preempt_request(rid)
+                    pending.remove(rid)
+        assert not pending, "not every request reached its eviction point"
+        outs = eng.drain()
+        for rid, p in zip(rids, prompts):
+            np.testing.assert_array_equal(
+                outs[rid], _ref(cfg, params, p, max_new),
+                err_msg=f"family={family} rid={rid}")
+        assert eng.stats["preemptions"] >= len(rids)
+        assert eng.stats["resumes"] >= len(rids)
+        for rid in rids:
+            evs = eng.telemetry.tracer.request_events(rid)
+            validate_order(evs)
+            assert derive_timeline(evs)["preempts"] == eng.requests[rid].preempts
+        assert eng.block_pool.num_free == eng.ecfg.num_blocks
+        eng.block_pool.check()
+
+    def test_preempt_while_prefilling(self, fam_setup):
+        """Eviction mid-prefill (before any token): the rollback unit is the
+        prefilled prefix only; resume completes prefill and the first token
+        is still recorded exactly once."""
+        family, cfg, params = fam_setup
+        eng = _engine(cfg, params, prefill_chunk=4)
+        prompt = _prompts(1, seed=5, lo=10, hi=13)[0]
+        rid = eng.add_request(prompt, 6)
+        eng.step()                                 # one 4-token chunk in
+        req = eng.requests[rid]
+        assert req.state != DECODING and 0 < req.prefilled < req.prefill_len
+        assert eng.preempt_request(rid)
+        outs = eng.drain()
+        np.testing.assert_array_equal(outs[rid], _ref(cfg, params, prompt, 6),
+                                      err_msg=f"family={family}")
+        validate_order(eng.telemetry.tracer.request_events(rid))
+
+    def test_conservative_mode_forced_preemption(self, fam_setup):
+        """`preempt_request` works without an OversubConfig too (ops hook):
+        the conservative scheduler re-reserves the full span on resume and
+        outputs stay bit-identical."""
+        family, cfg, params = fam_setup
+        eng = _engine(cfg, params, oversub=None)
+        prompt = _prompts(1, seed=7)[0]
+        rid = eng.add_request(prompt, 8)
+        while eng.requests[rid].state != DECODING:
+            eng.step()
+        eng.step()
+        assert eng.preempt_request(rid)
+        assert not eng.preempt_request(rid)        # already WAITING
+        outs = eng.drain()
+        np.testing.assert_array_equal(outs[rid], _ref(cfg, params, prompt, 8),
+                                      err_msg=f"family={family}")
+
+
+# ----------------------------------------------- pressure + policy behaviors
+class TestOversubEngine:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = _model_cfg("full")
+        return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def test_natural_pressure_preempts_and_stays_exact(self, setup):
+        """Tiny pool + optimistic admission: preemption must occur
+        organically (append failures), and every output still matches
+        `serve.generate`."""
+        cfg, params = setup
+        eng = _engine(cfg, params, num_blocks=20, max_slots=6,
+                      oversub=OversubConfig(admit_watermark=0.8))
+        prompts = _prompts(12, seed=3)
+        rids = [eng.add_request(p, 12, priority=i % 2)
+                for i, p in enumerate(prompts)]
+        outs = eng.drain()
+        for rid, p in zip(rids, prompts):
+            np.testing.assert_array_equal(outs[rid], _ref(cfg, params, p, 12))
+        assert eng.stats["preemptions"] > 0
+        assert eng.stats["block_appends"] > 0
+        for rid in rids:
+            validate_order(eng.telemetry.tracer.request_events(rid))
+        assert eng.block_pool.num_free == eng.ecfg.num_blocks
+        eng.block_pool.check()
+
+    def test_optimistic_admits_more_than_full_reservation(self, setup):
+        """The core oversubscription claim at engine level: a pool too small
+        to co-reserve every span still runs all slots concurrently under
+        optimistic admission."""
+        cfg, params = setup
+        prompts = _prompts(4, seed=9, lo=4, hi=6)
+        n_conc = {}
+        for name, ov in (("opt", OversubConfig()), ("full", None)):
+            eng = _engine(cfg, params, num_blocks=12, max_slots=4,
+                          max_blocks_per_seq=8, oversub=ov)
+            for p in prompts:
+                eng.add_request(p, 20)             # span needs 7-8 blocks
+            eng.step()
+            n_conc[name] = len(eng.scheduler.running)
+            eng.drain()
+        assert n_conc["full"] <= 2 < n_conc["opt"] == 4
+
+    def test_priority_preemption_unblocks_head(self, setup):
+        """A blocked class-0 head evicts a class-1 victim; the victim resumes
+        and both finish bit-identically."""
+        cfg, params = setup
+        eng = _engine(cfg, params, num_blocks=8, max_slots=2,
+                      max_blocks_per_seq=8)
+        lo_p, hi_p = _prompts(2, seed=11, lo=8, hi=10)
+        lo = eng.add_request(lo_p, 16, priority=1)
+        while eng.requests[lo].state != DECODING:
+            eng.step()
+        for _ in range(4):
+            eng.step()
+        hi = eng.add_request(hi_p, 16, priority=0)
+        outs = eng.drain()
+        assert eng.requests[lo].preempts >= 1      # victimized by the head
+        assert eng.stats["preemptions"] >= 1
+        np.testing.assert_array_equal(outs[lo], _ref(cfg, params, lo_p, 16))
+        np.testing.assert_array_equal(outs[hi], _ref(cfg, params, hi_p, 16))
+
+    def test_temperature_sampling_exact_across_preemption(self, setup):
+        """Sampled decoding survives preemption exactly: the PRNG key state
+        rides on the host request, so the split sequence — and therefore
+        every sampled token — is identical with and without eviction."""
+        cfg, params = setup
+        prompt = _prompts(1, seed=13)[0]
+        outs = {}
+        for forced in (False, True):
+            eng = _engine(cfg, params)
+            rid = eng.add_request(prompt, 10, temperature=0.8,
+                                  key=jax.random.PRNGKey(42))
+            if forced:
+                while eng.requests[rid].state != DECODING:
+                    eng.step()
+                for _ in range(3):
+                    eng.step()
+                assert eng.preempt_request(rid)
+            outs[forced] = eng.drain()[rid]
+        np.testing.assert_array_equal(outs[False], outs[True])
+
+    def test_stats_and_timeline_accounting(self, setup):
+        """preempts/resumes counters, per-request preempt counts, and the
+        derived preempted-time all agree after a forced cycle."""
+        cfg, params = setup
+        eng = _engine(cfg, params)
+        rid = eng.add_request(_prompts(1, seed=15)[0], 8)
+        while eng.requests[rid].state != DECODING:
+            eng.step()
+        eng.step()
+        eng.preempt_request(rid)
+        eng.drain()
+        assert eng.stats["preemptions"] == 1
+        assert eng.stats["resumes"] == 1
+        tl = eng.telemetry.request_timeline(rid)
+        assert tl["preempts"] == 1 == eng.requests[rid].preempts
+        assert tl["preempted_s"] > 0.0
+        assert tl["finish"] is not None

@@ -1,9 +1,14 @@
-"""Repo lint: serving metrics must flow through the telemetry registry.
+"""Repo lint: serving metrics must flow through the telemetry registry, and
+block-pool bookkeeping must flow through the BlockPool API.
 
 Any raw mutation of an ad-hoc stats dict (``self.stats["x"] += 1`` and
 friends) inside ``src/repro/serving/`` is a regression back to the three
 scattered dicts the registry superseded — only telemetry.py may own metric
-state."""
+state. Likewise any touch of a pool-internal structure (``pool._ref``,
+``pool._free`` ...) outside paged_cache.py/oversub.py bypasses the
+refcount/prefix-index invariants that preemption's register-then-evict
+discipline depends on — callers get alloc/append/share/evict_seq/free_seq,
+never the books."""
 import pathlib
 import re
 
@@ -17,6 +22,13 @@ SERVING = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "se
 # plain reads don't match because they aren't followed by an assignment op.
 _RAW_STATS_MUTATION = re.compile(
     r"\.stats\[[^\]]+\]\s*(?:[-+*/|&^%]|//|>>|<<)?=(?!=)")
+
+# attribute access on BlockPool's private bookkeeping (the refcounts, free
+# list, owner tables, and prefix index). `num_free`/`_free_slots` don't
+# match: the pattern anchors on the dot before the underscore.
+_POOL_INTERNAL = re.compile(
+    r"\._(?:free|ref|owned|index|hash_of|n_cached_free)\b")
+_POOL_ALLOWED = ("paged_cache.py", "oversub.py")
 
 
 def test_no_raw_stats_mutations_outside_telemetry():
@@ -45,3 +57,37 @@ def test_lint_regex_catches_the_banned_patterns():
         assert _RAW_STATS_MUTATION.search(s), s
     for s in good:
         assert not _RAW_STATS_MUTATION.search(s), s
+
+
+def test_no_pool_internal_access_outside_paged_cache():
+    assert SERVING.is_dir()
+    offenders = []
+    for path in sorted(SERVING.rglob("*.py")):
+        if path.name in _POOL_ALLOWED:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if _POOL_INTERNAL.search(line):
+                offenders.append(f"{path.relative_to(SERVING)}:{lineno}: "
+                                 f"{line.strip()}")
+    assert not offenders, (
+        "direct pool-internal access found (use the BlockPool API — "
+        "alloc/append/share/register/evict_seq/free_seq):\n"
+        + "\n".join(offenders))
+
+
+def test_pool_lint_regex_catches_the_banned_patterns():
+    bad = ["pool._ref[b] -= 1",
+           "del self.block_pool._owned[rid]",
+           "pool._free.append(b)",
+           "pool._index.pop(h)",
+           "k = pool._hash_of[b]",
+           "pool._n_cached_free += 1"]
+    good = ["pool.num_free == 4",
+            "self._free_slots.pop()",
+            "pool.free_seq(rid)",
+            "self._refresh()",
+            "self._m_prefill_deferrals.inc()"]
+    for s in bad:
+        assert _POOL_INTERNAL.search(s), s
+    for s in good:
+        assert not _POOL_INTERNAL.search(s), s
