@@ -47,6 +47,10 @@ def main(argv=None) -> None:
                     help="JSONL request-trace prefix for serving_bench")
     ap.add_argument("--serving-seed", type=int, default=0,
                     help="workload-generator seed for serving_bench")
+    ap.add_argument("--serving-spec", action="store_true",
+                    help="speculative-decoding rows for serving_bench "
+                         "(per-family spec on/off tokens/s, acceptance rate, "
+                         "tokens per verify step)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
@@ -54,7 +58,8 @@ def main(argv=None) -> None:
         kwargs = ({"workload": args.serving_workload,
                    "config_family": args.serving_family,
                    "trace_out": args.serving_trace_out,
-                   "seed": args.serving_seed}
+                   "seed": args.serving_seed,
+                   "spec": args.serving_spec}
                   if mod_name == "benchmarks.serving_bench" else {})
         try:
             mod = __import__(mod_name, fromlist=["main"])

@@ -51,6 +51,16 @@ TTFT/TPOT from a synced pass of the optimistic engine. This is the
 tail-latency-under-oversubscription measurement the paper's concurrency
 analysis calls for: the mean survives overload, the p99 is what collapses.
 
+Speculation rows (`--spec` / `benchmarks/run.py --serving-spec`): the
+decode-heavy `spec_workload` through every family with speculative decoding
+off vs on. The on-runs draft with a ReplayDrafter fed the off-run's own
+greedy outputs — a perfectly aligned draft source — so the speedup row is
+the multi-query verify path's CEILING (acceptance ~1, k tokens per step);
+the separate n-gram row reports the model-dependent acceptance of the
+self-drafting prompt-lookahead. Greedy outputs are asserted bit-identical
+on/off inside the bench, and each on-run reports its verify variant count
+(must stay 1: the AOT-warmed shape).
+
 `main(workload=...)` accepts "mixed" | "shared" | "oversub" | "both" (all
 three); `benchmarks/run.py --serving-workload` passes it through
 (`--serving-family` likewise forwards the family sweep, `--serving-seed`
@@ -72,7 +82,8 @@ from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import serve
 from repro.serving import workloads as W
-from repro.serving.engine import Engine, EngineConfig, OversubConfig
+from repro.serving.engine import (Engine, EngineConfig, OversubConfig,
+                                  ReplayDrafter, SpecConfig)
 
 FAMILIES = ("full", "sliding", "ssm", "hybrid")
 
@@ -491,8 +502,93 @@ def _main_oversub(trace_out=None, seed=0):
              float(np.percentile(tpots, q)) * 1e6)
 
 
+SPEC_K = 8           # verify width for the speculation rows
+
+
+def _spec_ecfg(spec):
+    return EngineConfig(block_size=16, num_blocks=256, max_blocks_per_seq=8,
+                        max_slots=MAX_SLOTS, prefill_chunk=32,
+                        prefills_per_step=4, spec=spec)
+
+
+def _run_spec(cfg, params, prompts, max_news, spec, streams=None):
+    """One measured pass (second of two; the first warms the compile
+    caches). With ``streams`` (one expected prompt++output stream per
+    request, submit order) the spec config's ReplayDrafter is fed the true
+    continuations — the high-acceptance limit. Returns (outputs by submit
+    order, wall seconds, engine)."""
+    def once():
+        eng = Engine(cfg, params, _spec_ecfg(spec))
+        rids = [eng.add_request(p, mn) for p, mn in zip(prompts, max_news)]
+        if streams is not None:
+            for rid, s in zip(rids, streams):
+                eng.drafter.remember(rid, s)
+        t0 = time.perf_counter()
+        outs = eng.drain()
+        wall = time.perf_counter() - t0
+        return [outs[r] for r in rids], wall, eng
+    once()
+    return once()
+
+
+def _main_spec(trace_out=None, seed=0):
+    """Speculative decoding rows: per family, wall tokens/s with speculation
+    off vs on (ReplayDrafter — a perfectly aligned draft source, so the row
+    measures the verify path's ceiling), acceptance rate, and tokens per
+    verify step; plus the self-drafting n-gram row on the full-attention
+    family (model-dependent acceptance). Greedy outputs are bit-identical
+    on/off — asserted here, not just claimed."""
+    prompts, max_news = W.spec_workload(seed=seed)
+    for fam in FAMILIES:
+        cfg = _family_cfg(fam)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        outs_off, wall_off, _e = _run_spec(cfg, params, prompts, max_news,
+                                           None)
+        # the off run's greedy outputs ARE the true continuations (greedy is
+        # bit-identical on/off): replay them as drafts to measure the
+        # high-acceptance limit of the verify path
+        streams = [np.concatenate([p, o]) for p, o in zip(prompts, outs_off)]
+        spec = SpecConfig(k=SPEC_K, drafter=ReplayDrafter())
+        outs_on, wall_on, eng = _run_spec(cfg, params, prompts, max_news,
+                                          spec, streams=streams)
+        for a, b in zip(outs_off, outs_on):
+            np.testing.assert_array_equal(a, b)
+        total = sum(o.shape[0] for o in outs_on)
+        snap = eng.telemetry.registry.snapshot()
+        drafted = snap["engine_draft_tokens_total"]
+        accepted = snap["engine_accepted_tokens_total"]
+        vsteps = snap["engine_verify_steps_total"]
+        emit(f"serving_spec_{fam}_off_tokens_per_s", wall_off / total * 1e6,
+             f"{total / wall_off:.1f}")
+        emit(f"serving_spec_{fam}_on_tokens_per_s", wall_on / total * 1e6,
+             f"{total / wall_on:.1f}")
+        emit(f"serving_spec_{fam}_speedup", None,
+             f"{wall_off / wall_on:.2f}x")
+        emit(f"serving_spec_{fam}_acceptance", None,
+             f"{accepted / max(drafted, 1):.3f}")
+        emit(f"serving_spec_{fam}_tokens_per_verify_step", None,
+             f"{total / max(vsteps, 1):.2f}")
+        emit(f"serving_spec_{fam}_verify_variants", None,
+             str(eng.telemetry.recompiles.unique("verify")))
+
+    # self-drafting n-gram lookahead on the full-attention family: no
+    # oracle, acceptance is whatever the model's own stream offers
+    cfg = _family_cfg("full")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    outs_off, wall_off, _e = _run_spec(cfg, params, prompts, max_news, None)
+    outs_on, wall_on, eng = _run_spec(cfg, params, prompts, max_news,
+                                      SpecConfig(k=4, drafter="ngram"))
+    for a, b in zip(outs_off, outs_on):
+        np.testing.assert_array_equal(a, b)
+    snap = eng.telemetry.registry.snapshot()
+    rate = (snap["engine_accepted_tokens_total"]
+            / max(snap["engine_draft_tokens_total"], 1))
+    emit("serving_spec_ngram_speedup", None, f"{wall_off / wall_on:.2f}x")
+    emit("serving_spec_ngram_acceptance", None, f"{rate:.3f}")
+
+
 def main(workload: str = "both", config_family: str = None, trace_out=None,
-         seed: int = 0):
+         seed: int = 0, spec: bool = False):
     if workload not in ("mixed", "shared", "oversub", "both", "none"):
         raise ValueError(f"unknown workload {workload!r}")
     if workload != "none":
@@ -504,6 +600,8 @@ def main(workload: str = "both", config_family: str = None, trace_out=None,
             _main_shared(cfg, params, trace_out, seed)
         if workload in ("oversub", "both"):
             _main_oversub(trace_out, seed)
+    if spec:
+        _main_spec(trace_out, seed)
     if config_family:
         fams = FAMILIES if config_family == "all" else (config_family,)
         for fam in fams:
@@ -518,6 +616,9 @@ if __name__ == "__main__":
     ap.add_argument("--config-family",
                     choices=FAMILIES + ("all",), default=None,
                     help="also run the per-family state-provider sweep")
+    ap.add_argument("--spec", action="store_true",
+                    help="also run the speculative-decoding rows (per-family "
+                         "spec on/off, acceptance, tokens per verify step)")
     ap.add_argument("--trace-out", default=None, metavar="PREFIX",
                     help="write each workload's synced-pass event log to "
                          "PREFIX.<workload>.jsonl (replay via "
@@ -525,4 +626,5 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0,
                     help="workload-generator seed (arrival trace, lengths)")
     args = ap.parse_args()
-    main(args.workload, args.config_family, args.trace_out, args.seed)
+    main(args.workload, args.config_family, args.trace_out, args.seed,
+         args.spec)

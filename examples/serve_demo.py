@@ -11,6 +11,9 @@ oversubscription wave then serves the same requests through an optimistic
 engine (prompt-only admission, on-demand decode-block growth) and forces a
 mid-flight preemption: the victim's prefix is registered in the cache, the
 request is evicted and later resumed, and its greedy output stays
+bit-identical. A speculative wave then serves the same requests with
+n-gram self-drafting — the copy task is the prompt-lookahead drafter's
+best case, so each verify step advances several positions at once, still
 bit-identical. A final hybrid-config wave smokes the per-layer state
 providers end to end: a zamba2-style mamba2+shared-attention model served
 through the same engine (recurrent slabs + paged KV behind one block
@@ -32,7 +35,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.optim import make_optimizer
 from repro.serving import serve
-from repro.serving.engine import Engine, EngineConfig, OversubConfig
+from repro.serving.engine import (Engine, EngineConfig, OversubConfig,
+                                  SpecConfig)
 from repro.train import trainer
 
 
@@ -163,6 +167,30 @@ def main():
           f"{tl['preempted_s'] * 1e3:.2f} ms out of the batch")
     assert ov.stats["preemptions"] >= 1 and ov.stats["resumes"] >= 1
     assert ov.block_pool.num_free == 24, "oversub engine leaked KV blocks"
+
+    # speculative wave: the copy task is the n-gram drafter's best case —
+    # the continuation has literally been seen before (it IS the pattern),
+    # so the prompt-lookahead drafter proposes the true tokens and each
+    # verify step advances several positions at once, bit-identically
+    sp = Engine(cfg, state["params"],
+                EngineConfig(block_size=8, num_blocks=64, max_blocks_per_seq=8,
+                             max_slots=4, prefill_chunk=16,
+                             spec=SpecConfig(k=6)))
+    sp_rids = [sp.add_request(test["tokens"][b, :half + kp], max_new=kp)
+               for b, kp in enumerate(keeps)]
+    sp_outs = sp.drain()
+    for r0, r in zip(rids, sp_rids):
+        np.testing.assert_array_equal(outs[r0], sp_outs[r])
+    reg = sp.telemetry.registry
+    drafted = reg.get("engine_draft_tokens_total").value
+    accepted = reg.get("engine_accepted_tokens_total").value
+    vsteps = reg.get("engine_verify_steps_total").value
+    emitted = sum(len(sp_outs[r]) for r in sp_rids)
+    print(f"engine speculative wave (n-gram self-drafting, k=6) x"
+          f"{len(sp_rids)}: {accepted}/{drafted} drafts accepted, "
+          f"{(emitted - len(sp_rids)) / max(vsteps, 1):.2f} tokens/verify "
+          f"step, outputs bit-identical")
+    assert accepted > 0, "speculation never accepted a draft"
 
     # hybrid wave: mamba2 layers carry O(1) recurrent slabs, the shared
     # attention layer pages KV — the same engine serves both behind one

@@ -82,6 +82,134 @@ def paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / denom).reshape(H, hd).astype(o_ref.dtype)
 
 
+def paged_verify_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, scale, block_size, pages,
+                        groups, n_q):
+    """Multi-query verify body: grid (B, P), q block (1, n_q, H, hd).
+
+    ``lens_ref[b]`` counts tokens INCLUDING the n_q draft tokens, so query
+    row j sits at absolute position ``lens - n_q + j`` and is masked to keys
+    ``kpos <= lens - n_q + j`` — causal among the draft positions and over
+    the committed prefix. Online-softmax rows are laid out (Hkv, n_q*groups)
+    so each row runs exactly the decode kernel's elementwise schedule;
+    fully-masked pages leave (m, l, acc) bit-unchanged."""
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    seq_len = lens_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(p * block_size < seq_len)
+    def _compute():
+        H, hd = q_ref.shape[2], q_ref.shape[3]
+        Hkv = H // groups
+        rows = n_q * groups
+        # (n_q, H, hd) -> (Hkv, n_q*groups, hd): kv-head-major rows
+        q = (q_ref[0].astype(jnp.float32)
+             .reshape(n_q, Hkv, groups, hd)
+             .transpose(1, 0, 2, 3)
+             .reshape(Hkv, rows, hd))
+        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)            # (Hkv, bs, hd)
+        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale            # (Hkv, rows, bs)
+        kpos = p * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (Hkv, rows, block_size), 2)
+        row = jax.lax.broadcasted_iota(jnp.int32, (Hkv, rows, block_size), 1)
+        qpos = seq_len - n_q + row // groups
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                                        # (Hkv, rows, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        prob = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, axis=2, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            prob, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)                    # (Hkv, rows, hd)
+        m_ref[...] = m_new
+
+    @pl.when(p == pages - 1)
+    def _finish():
+        H, hd = o_ref.shape[2], o_ref.shape[3]
+        Hkv = H // groups
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        acc = (acc_ref[...] / denom).reshape(Hkv, n_q, groups, hd)
+        o_ref[0] = acc.transpose(1, 0, 2, 3).reshape(n_q, H, hd).astype(
+            o_ref.dtype)
+
+
+def paged_ring_verify_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref,
+                             v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
+                             block_size, pages, groups, window, n_q):
+    """Ring-mode multi-query verify body: grid (B, R). ``pos_ref[b]`` is the
+    NEWEST draft position (``lens - 1``); query row j sits at
+    ``pos - (n_q - 1) + j`` and is masked to its own sliding window. The
+    caller must size the ring with ``draft = n_q - 1`` slack so the oldest
+    query's window is still resident."""
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+    pos = pos_ref[b]
+    q_cur = pos // block_size
+    page = q_cur - ((q_cur % pages - r) % pages)
+    base = page * block_size
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # live iff the page intersects the union of the n_q query windows:
+    # keys in (pos - (n_q - 1) - window, pos]
+    live = ((lens_ref[b] > 0) & (page >= 0) & (base <= pos)
+            & (base + block_size - 1 > pos - (n_q - 1) - window))
+
+    @pl.when(live)
+    def _compute():
+        H, hd = q_ref.shape[2], q_ref.shape[3]
+        Hkv = H // groups
+        rows = n_q * groups
+        q = (q_ref[0].astype(jnp.float32)
+             .reshape(n_q, Hkv, groups, hd)
+             .transpose(1, 0, 2, 3)
+             .reshape(Hkv, rows, hd))
+        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = base + jax.lax.broadcasted_iota(
+            jnp.int32, (Hkv, rows, block_size), 2)
+        row = jax.lax.broadcasted_iota(jnp.int32, (Hkv, rows, block_size), 1)
+        qpos = pos - (n_q - 1) + row // groups
+        s = jnp.where((kpos <= qpos) & (kpos > qpos - window), s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        prob = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(prob, axis=2, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            prob, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(r == pages - 1)
+    def _finish():
+        H, hd = o_ref.shape[2], o_ref.shape[3]
+        Hkv = H // groups
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        acc = (acc_ref[...] / denom).reshape(Hkv, n_q, groups, hd)
+        o_ref[0] = acc.transpose(1, 0, 2, 3).reshape(n_q, H, hd).astype(
+            o_ref.dtype)
+
+
 def paged_ring_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref, v_ref,
                       o_ref, m_ref, l_ref, acc_ref, *, scale, block_size,
                       pages, groups, window):
@@ -209,5 +337,84 @@ def paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens, *,
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pool, v_pool)
+
+
+def paged_attention_verify_pallas(q, k_pool, v_pool, block_tables, seq_lens,
+                                  *, scale=None, window=None, positions=None,
+                                  ring_pages=None, interpret=False):
+    """Multi-query verify: q: (B, K, H, hd) — K draft queries per sequence,
+    K/V already written (write-then-attend). ``seq_lens`` counts tokens
+    INCLUDING the K draft tokens; query j attends keys up to position
+    ``seq_lens - K + j``. Active slots must satisfy ``seq_lens >= K``.
+    Ring mode: ``positions = seq_lens - 1`` (newest draft position) and the
+    ring must be sized with ``draft = K - 1`` slack. Returns (B, K, H, hd)."""
+    B, K, H, hd = q.shape
+    N, bs, Hkv, _ = k_pool.shape
+    P = block_tables.shape[1]
+    groups = H // Hkv
+    rows = K * groups
+    scale = scale if scale is not None else hd ** -0.5
+
+    if window is not None:
+        if positions is None or ring_pages is None:
+            raise ValueError("ring mode needs window, positions AND ring_pages")
+        R = ring_pages
+        kern = functools.partial(
+            paged_ring_verify_kernel, scale=scale, block_size=bs, pages=R,
+            groups=groups, window=window, n_q=K)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, R),
+            in_specs=[
+                pl.BlockSpec((1, K, H, hd),
+                             lambda b, p, tbl, lens, pos: (b, 0, 0, 0)),
+                pl.BlockSpec((1, bs, Hkv, hd),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+                pl.BlockSpec((1, bs, Hkv, hd),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, K, H, hd),
+                                   lambda b, p, tbl, lens, pos: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Hkv, rows, 1), jnp.float32),
+                pltpu.VMEM((Hkv, rows, 1), jnp.float32),
+                pltpu.VMEM((Hkv, rows, hd), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            kern,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, K, H, hd), q.dtype),
+            interpret=interpret,
+        )(block_tables, seq_lens, positions.astype(jnp.int32), q, k_pool,
+          v_pool)
+
+    kern = functools.partial(
+        paged_verify_kernel, scale=scale, block_size=bs, pages=P,
+        groups=groups, n_q=K)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, K, H, hd), lambda b, p, tbl, lens: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, H, hd),
+                               lambda b, p, tbl, lens: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, rows, 1), jnp.float32),
+            pltpu.VMEM((Hkv, rows, 1), jnp.float32),
+            pltpu.VMEM((Hkv, rows, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, H, hd), q.dtype),
         interpret=interpret,
     )(block_tables, seq_lens, q, k_pool, v_pool)

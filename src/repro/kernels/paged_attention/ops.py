@@ -10,7 +10,8 @@ from functools import partial
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_pallas, paged_attention_verify_pallas)
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
@@ -31,3 +32,18 @@ def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
     return paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens,
                                   window=window, positions=positions,
                                   ring_pages=ring_pages, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret", "window", "ring_pages"))
+def paged_attention_verify(q, k_pool, v_pool, block_tables, seq_lens, *,
+                           window=None, positions=None, ring_pages=None,
+                           interpret=None):
+    """Multi-query verify mode for speculative decoding. q: (B, K, H, hd) —
+    K draft queries per sequence, all K/V already written. ``seq_lens``
+    counts tokens INCLUDING the K drafts; query j attends causally up to
+    position ``seq_lens - K + j``. Ring mode: ``positions = seq_lens - 1``
+    and the ring sized with ``draft = K - 1`` slack. Returns (B, K, H, hd)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return paged_attention_verify_pallas(
+        q, k_pool, v_pool, block_tables, seq_lens, window=window,
+        positions=positions, ring_pages=ring_pages, interpret=interpret)

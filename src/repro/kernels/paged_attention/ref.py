@@ -46,6 +46,28 @@ def _masked_gqa_attend(q, k, v, valid, scale):
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def _masked_gqa_attend_multi(q, k, v, valid, scale):
+    """Multi-query variant: q: (B, K, H, hd); k/v: (B, Kk, Hkv, hd);
+    valid: (B, K, Kk) bool, one key mask per query row. Each row runs the
+    exact elementwise ops of :func:`_masked_gqa_attend`, so a verify row is
+    bit-identical to the single-query reference at the same position.
+    Returns (B, K, H, hd)."""
+    B, K, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, K, Hkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale            # (B,K,Hkv,g,Kk)
+    mask = valid[:, :, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.maximum(m, NEG_INF / 2))
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p / denom, v.astype(jnp.float32))
+    return out.reshape(B, K, H, hd).astype(q.dtype)
+
+
 def ring_key_positions(positions, ring_pages, block_size):
     """Absolute position of every (ring slot, offset) pair, per sequence.
     positions: (B,) current absolute position. Returns (B, R*bs) int32;
@@ -91,3 +113,47 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
              & (kpos > positions[:, None] - window)
              & (seq_lens[:, None] > 0))
     return _masked_gqa_attend(q, k, v, valid, scale)
+
+
+def paged_attention_verify_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
+                               scale=None, window=None, positions=None,
+                               ring_pages=None):
+    """Multi-query verify oracle for speculative decoding.
+
+    q: (B, K, H, hd) — K draft queries per sequence. ``seq_lens[b]`` counts
+    valid tokens INCLUDING all K draft tokens (their K/V already written,
+    write-then-attend), so query j of sequence b sits at absolute position
+    ``seq_lens[b] - K + j`` and attends keys causally up to and including
+    itself. ``seq_lens[b] == 0`` marks an inactive slot (zero output).
+
+    Ring mode (window/positions/ring_pages set): ``positions[b]`` is the
+    NEWEST draft position ``seq_lens[b] - 1``; each query attends its own
+    sliding window ``(qpos - window, qpos]`` through the ring layout. The
+    caller is responsible for sizing the ring so that the oldest query's
+    window is still resident (``ring_pages(window, bs, draft=K-1)``).
+    Returns (B, K, H, hd)."""
+    B, K, H, hd = q.shape
+    N, bs, Hkv, _ = k_pool.shape
+    scale = scale if scale is not None else hd ** -0.5
+    qpos = seq_lens[:, None] - K + jnp.arange(K)[None, :]         # (B, K)
+
+    if window is None:
+        P = block_tables.shape[1]
+        k = k_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+        v = v_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+        kpos = jnp.arange(P * bs)
+        valid = kpos[None, None, :] <= qpos[:, :, None]           # (B, K, P*bs)
+        return _masked_gqa_attend_multi(q, k, v, valid, scale)
+
+    if positions is None or ring_pages is None:
+        raise ValueError("ring mode needs window, positions AND ring_pages")
+    R = ring_pages
+    tables = block_tables[:, :R]
+    k = k_pool[tables].reshape(B, R * bs, Hkv, hd)
+    v = v_pool[tables].reshape(B, R * bs, Hkv, hd)
+    kpos = ring_key_positions(positions, R, bs)                   # (B, R*bs)
+    valid = ((kpos[:, None, :] >= 0)
+             & (kpos[:, None, :] <= qpos[:, :, None])
+             & (kpos[:, None, :] > qpos[:, :, None] - window)
+             & (seq_lens[:, None, None] > 0))
+    return _masked_gqa_attend_multi(q, k, v, valid, scale)

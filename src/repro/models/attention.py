@@ -234,6 +234,65 @@ def attention_decode_paged(params, x, kv, block_tables, positions, attn_lens,
     return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
 
+def paged_write_multi(kv, k_new, v_new, block_tables, positions, valid, *,
+                      ring_pages=None):
+    """Scatter K draft tokens' K/V per sequence into the block pool.
+
+    kv: {"k","v"}: (N, bs, Hkv, hd); k_new/v_new: (B, K, Hkv, hd);
+    block_tables: (B, P); positions: (B, K) absolute token positions;
+    valid: (B, K) bool — invalid (rejected-horizon or inactive) writes are
+    dropped (OOB block id) so pool contents stay canonical. ring_pages:
+    sliding-window layers write page (pos // bs) % ring_pages."""
+    N, bs = kv["k"].shape[0], kv["k"].shape[1]
+    pages = positions // bs
+    if ring_pages is not None:
+        pages = pages % ring_pages
+    bids = jnp.take_along_axis(block_tables, pages, axis=1)       # (B, K)
+    bids = jnp.where(valid, bids, N)        # OOB => mode="drop"
+    offs = positions % bs
+    return {
+        "k": kv["k"].at[bids, offs].set(k_new, mode="drop"),
+        "v": kv["v"].at[bids, offs].set(v_new, mode="drop"),
+    }
+
+
+def attention_verify_paged(params, x, kv, block_tables, base, qlims, cfg, *,
+                           impl="ref", interpret=None, window=None,
+                           ring_pages=None):
+    """Multi-query speculative verify against a paged KV pool. x: (B,K,D) —
+    K draft tokens per sequence, draft j at absolute position base[b] + j.
+    qlims (B,): number of draft positions whose K/V may be written this step
+    (0 marks an inactive slot); queries at or past qlims produce garbage the
+    engine discards, and their writes are dropped so rejected-horizon KV
+    never lands in the pool. window/ring_pages switch sliding-window layers
+    to the ring layout — the ring must be sized with `draft = K - 1` slack
+    (see state_providers.ring_pages). Returns (out (B,K,D), new kv)."""
+    from repro.kernels.paged_attention import (paged_attention_verify,
+                                               paged_attention_verify_ref)
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B, K = x.shape[0], x.shape[1]
+    positions = base[:, None] + jnp.arange(K)[None, :]            # (B, K)
+    pos_in = positions
+    if cfg.rope_mode == "mrope":
+        pos_in = jnp.broadcast_to(pos_in[None], (3, B, K))
+    q, k_new, v_new = _project_qkv(params, x, pos_in, cfg, window)
+    write = jnp.arange(K)[None, :] < qlims[:, None]               # (B, K)
+    kv = paged_write_multi(kv, k_new, v_new, block_tables, positions, write,
+                           ring_pages=ring_pages)
+    attn_lens = jnp.where(qlims > 0, base + K, 0)
+    newest = attn_lens - 1
+    if impl == "kernel":
+        out = paged_attention_verify(
+            q, kv["k"], kv["v"], block_tables, attn_lens, window=window,
+            positions=newest, ring_pages=ring_pages, interpret=interpret)
+    else:
+        out = paged_attention_verify_ref(
+            q, kv["k"], kv["v"], block_tables, attn_lens, window=window,
+            positions=newest, ring_pages=ring_pages)
+    out = out.reshape(B, K, h * hd)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
+
+
 def attention_prefill_paged(params, x, kv, table_rows, starts, valids, cfg):
     """Segment-masked packed prefill against the paged pool. x: (G,C,D) —
     one prompt chunk per segment, segment g starting at absolute position

@@ -109,10 +109,16 @@ def state_kinds(cfg: ModelConfig):
     return [state_kind(k, cfg) for k in layer_kinds(cfg)]
 
 
-def ring_pages(window: int, block_size: int) -> int:
+def ring_pages(window: int, block_size: int, draft: int = 0) -> int:
     """Ring length in pages: ceil(window/bs) intact pages always cover the
-    last `window` positions, +1 for the page currently being overwritten."""
-    return -(-window // block_size) + 1
+    last `window` positions, +1 for the page currently being overwritten.
+
+    ``draft`` adds speculative-decoding slack: a verify step holds K = draft
+    + 1 in-flight positions, and the OLDEST draft query still needs its full
+    window `(qpos - window, qpos]` resident while the ring has already
+    advanced to the newest draft — so the intact span must cover
+    window + draft positions back from the newest write."""
+    return -(-(window + draft) // block_size) + 1
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -181,13 +187,14 @@ class RingKVProvider(_PagedPoolProvider):
     sequence; token at position p lives in table[(p // bs) % ring] at offset
     p % bs, so long generations stop consuming new blocks."""
     window: int = 0
+    draft: int = 0   # speculative slack: K-1 extra in-flight positions
 
     kind = "ring"
     supports_prefix_caching = False  # ring content depends on wrap position
 
     @property
     def ring_pages(self) -> int:
-        return ring_pages(self.window, self.block_size)
+        return ring_pages(self.window, self.block_size, draft=self.draft)
 
     def blocks_needed(self, total_tokens: int) -> int:
         return min(_ceil_div(total_tokens, self.block_size), self.ring_pages)
@@ -252,31 +259,58 @@ class RecurrentSlabProvider:
             lambda a, s: a.at[:, slot].set(jnp.asarray(s)), state, snap)
 
 
+# -------------------------------------------------- speculative rollback
+def select_checkpoint(checkpoints, accepts, old):
+    """Roll rejected draft tokens back to the accepted recurrent state.
+
+    ``checkpoints`` leaves: (n_sb, K, max_slots, ...) — the per-draft-step
+    states captured by the verify scan (checkpoint j = state after
+    processing drafts 0..j). ``accepts``: (max_slots,) int32 tokens accepted
+    this step (1..K; 0 marks an inactive slot). ``old``: the pre-verify slab
+    (n_sb, max_slots, ...). Returns the slab advanced by exactly
+    ``accepts`` tokens per slot: checkpoint ``accepts - 1`` where active,
+    the untouched old state elsewhere. This is the ONLY sanctioned mutation
+    of checkpointed recurrent state — keep callers out of the internals."""
+    def sel(cps, o):
+        K, S = cps.shape[1], cps.shape[2]
+        cp = jnp.clip(accepts - 1, 0, K - 1)                      # (S,)
+        w = (jnp.arange(K)[None, :, None] == cp[None, None, :])   # (1, K, S)
+        w = w.reshape((1, K, S) + (1,) * (cps.ndim - 3))
+        picked = jnp.sum(jnp.where(w, cps, jnp.zeros((), cps.dtype)), axis=1)
+        act = (accepts > 0).reshape((1, S) + (1,) * (o.ndim - 2))
+        return jnp.where(act, picked.astype(o.dtype), o)
+
+    return jax.tree.map(sel, checkpoints, old)
+
+
 # ----------------------------------------------------------------- assembly
 def provider_for(skind: str, cfg: ModelConfig, *, num_blocks: int,
                  block_size: int, max_slots: int,
-                 max_blocks_per_seq: Optional[int] = None):
+                 max_blocks_per_seq: Optional[int] = None, draft: int = 0):
     if skind == "full":
         return PagedKVProvider(cfg, num_blocks, block_size, max_blocks_per_seq)
     if skind == "ring":
         return RingKVProvider(cfg, num_blocks, block_size, max_blocks_per_seq,
-                              window=cfg.window_size)
+                              window=cfg.window_size, draft=draft)
     if skind in ("rwkv", "mamba"):
         return RecurrentSlabProvider(cfg, max_slots, skind)
     raise ValueError(f"unknown state kind {skind!r}")
 
 
 def providers_for(cfg: ModelConfig, *, num_blocks: int, block_size: int,
-                  max_slots: int, max_blocks_per_seq: Optional[int] = None):
+                  max_slots: int, max_blocks_per_seq: Optional[int] = None,
+                  draft: int = 0):
     """One provider per layer of a superblock, aligned with layer_kinds(cfg).
-    Layers of the same kind share a (frozen, equal) provider instance."""
+    Layers of the same kind share a (frozen, equal) provider instance.
+    ``draft`` = K - 1 when speculative decoding is on (ring slack)."""
     cache = {}
     out = []
     for sk in state_kinds(cfg):
         if sk not in cache:
             cache[sk] = provider_for(
                 sk, cfg, num_blocks=num_blocks, block_size=block_size,
-                max_slots=max_slots, max_blocks_per_seq=max_blocks_per_seq)
+                max_slots=max_slots, max_blocks_per_seq=max_blocks_per_seq,
+                draft=draft)
         out.append(cache[sk])
     return out
 

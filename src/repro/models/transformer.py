@@ -370,14 +370,17 @@ def _attn_block(kind, p, lp, h_in, cfg, attn_out):
 
 
 def paged_decode_step(cfg: ModelConfig, params, pool, inputs, block_tables,
-                      positions, attn_lens, *, impl="ref", interpret=None):
+                      positions, attn_lens, *, impl="ref", interpret=None,
+                      draft=0):
     """One-token decode for a continuous batch of slots, dispatching each
     layer to its state kind. inputs: {"token": (B,)}; block_tables: (B, P);
     positions: (B,) absolute position of each incoming token; attn_lens:
     (B,) tokens to attend over including the new one (0 = inactive slot).
     Recurrent slabs are per-slot (B == max_slots) and their updates are
     masked for inactive slots, so slots mid-prefill are never corrupted by
-    the batched decode. Returns (logits (B,V), new pool)."""
+    the batched decode. ``draft`` must match the engine's speculative K-1
+    (0 when speculation is off) so ring layers use the same enlarged ring
+    as the verify step. Returns (logits (B,V), new pool)."""
     x = _embed_tokens(cfg, params, inputs["token"][:, None])
     kinds = _layer_kinds(cfg)
     skinds = SP.state_kinds(cfg)
@@ -393,7 +396,7 @@ def paged_decode_step(cfg: ModelConfig, params, pool, inputs, block_tables,
             if skind in ("full", "ring"):
                 p = shared if kind == "shared_attn" else lp
                 window = cfg.window_size if skind == "ring" else None
-                rp = (SP.ring_pages(window, st["k"].shape[1])
+                rp = (SP.ring_pages(window, st["k"].shape[1], draft=draft)
                       if skind == "ring" else None)
                 h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
                 y, kv = A.attention_decode_paged(
@@ -416,6 +419,71 @@ def paged_decode_step(cfg: ModelConfig, params, pool, inputs, block_tables,
     x, new_pools = jax.lax.scan(scan_body, x, (params["blocks"], pool))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     lg = logits(cfg, params, x)[:, 0]
+    return lg, new_pools
+
+
+def _recurrent_verify_layer(kind, lp, slab, x, cfg, shared):
+    """Speculative verify through a recurrent layer: a K-step token scan of
+    the decode path that CAPTURES every intermediate state. slab leaves:
+    (max_slots, ...); x: (B, K, D) with B == max_slots. Returns
+    (y (B, K, D), checkpoints) where checkpoint leaves are (K, max_slots,
+    ...) — checkpoint j is the state after processing draft tokens 0..j, so
+    the caller can roll rejected drafts back exactly by selecting
+    checkpoint `k_accepted - 1` (state_providers.select_checkpoint)."""
+    def body(st, t):
+        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)        # (B,1,D)
+        yt, new = _apply_layer_decode(kind, lp, st, xt, t, cfg, shared)
+        return new, (yt[:, 0], new)
+
+    _, (ys, cps) = jax.lax.scan(body, slab, jnp.arange(x.shape[1]))
+    return ys.swapaxes(0, 1), cps
+
+
+def paged_verify_step(cfg: ModelConfig, params, pool, tokens, block_tables,
+                      base, qlims, *, impl="ref", interpret=None):
+    """Multi-query speculative verify for a continuous batch of slots.
+    tokens: (B, K) — K draft tokens per slot, draft j at absolute position
+    `base[b] + j`; qlims: (B,) number of draft positions that may commit
+    K/V this step (0 = inactive slot). Paged layers write the first
+    qlims[b] drafts' K/V (write-then-attend) and attend causally among the
+    draft positions; recurrent layers scan the K tokens capturing per-step
+    checkpoint states for exact rollback. Returns (logits (B, K, V),
+    new pool) where recurrent entries hold stacked checkpoints
+    (n_sb, K, max_slots, ...) — the caller selects the accepted checkpoint
+    via state_providers.select_checkpoint."""
+    x = _embed_tokens(cfg, params, tokens)                        # (B, K, D)
+    K = tokens.shape[1]
+    kinds = _layer_kinds(cfg)
+    skinds = SP.state_kinds(cfg)
+    shared = params.get("shared_attn")
+
+    def scan_body(x, sb):
+        sb_params, sb_pool = sb
+        new_pool = {}
+        for i, (kind, skind) in enumerate(zip(kinds, skinds)):
+            lp = sb_params[f"l{i}"]
+            st = sb_pool[f"l{i}"]
+            if skind in ("full", "ring"):
+                p = shared if kind == "shared_attn" else lp
+                window = cfg.window_size if skind == "ring" else None
+                rp = (SP.ring_pages(window, st["k"].shape[1], draft=K - 1)
+                      if skind == "ring" else None)
+                h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+                y, kv = A.attention_verify_paged(
+                    p["attn"], h, st, block_tables, base, qlims, cfg,
+                    impl=impl, interpret=interpret, window=window,
+                    ring_pages=rp)
+                x = _attn_block(kind, p, lp, x, cfg, y)
+                new_pool[f"l{i}"] = kv
+            else:
+                y, cps = _recurrent_verify_layer(kind, lp, st, x, cfg, shared)
+                x = y
+                new_pool[f"l{i}"] = cps
+        return x, new_pool
+
+    x, new_pools = jax.lax.scan(scan_body, x, (params["blocks"], pool))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    lg = logits(cfg, params, x)                                   # (B, K, V)
     return lg, new_pools
 
 
@@ -447,7 +515,7 @@ def _recurrent_prefill_layer(kind, lp, slab, x, valids, slots, cfg, shared):
 
 
 def paged_prefill_packed(cfg: ModelConfig, params, pool, tokens, tables,
-                         starts, valids, slots):
+                         starts, valids, slots, *, draft=0):
     """Segment-masked packed prefill: one prompt chunk per segment, all
     segments in ONE device call. tokens: (G, C) int32 — segment g's chunk
     starts at absolute position `starts[g]` with the first `valids[g]`
@@ -475,7 +543,8 @@ def paged_prefill_packed(cfg: ModelConfig, params, pool, tokens, tables,
                 p = shared if kind == "shared_attn" else lp
                 h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
                 if skind == "ring":
-                    rp = SP.ring_pages(cfg.window_size, st["k"].shape[1])
+                    rp = SP.ring_pages(cfg.window_size, st["k"].shape[1],
+                                       draft=draft)
                     y, kv = A.attention_prefill_ring(
                         p["attn"], h, st, rows, starts, valids, cfg,
                         window=cfg.window_size, ring_pages=rp)
@@ -499,7 +568,7 @@ def paged_prefill_packed(cfg: ModelConfig, params, pool, tokens, tables,
 
 
 def paged_prefill_step(cfg: ModelConfig, params, pool, tokens, table_row,
-                       start, valid_len, slot):
+                       start, valid_len, slot, *, draft=0):
     """Chunked prefill of ONE sequence into its per-kind state (a G=1
     packed call). tokens: (1, C) chunk starting at absolute position
     `start`, first `valid_len` real. `slot` locates the sequence's
@@ -509,7 +578,7 @@ def paged_prefill_step(cfg: ModelConfig, params, pool, tokens, table_row,
         cfg, params, pool, tokens, table_row[None],
         jnp.asarray(start, jnp.int32)[None],
         jnp.asarray(valid_len, jnp.int32)[None],
-        jnp.asarray(slot, jnp.int32)[None])
+        jnp.asarray(slot, jnp.int32)[None], draft=draft)
 
 
 def decode_step(cfg: ModelConfig, params, state, inputs, index):

@@ -3,10 +3,14 @@ from repro.serving.engine.oversub import OversubConfig, SLOPolicy
 from repro.serving.engine.paged_cache import (BlockPool, BlockPoolError,
                                               prefix_hashes)
 from repro.serving.engine.scheduler import Request, Scheduler
+from repro.serving.engine.spec import (Drafter, DraftModelDrafter,
+                                       NgramDrafter, ReplayDrafter,
+                                       SpecConfig)
 from repro.serving.telemetry import (MetricsRegistry, RecompileTracker,
                                      RequestTracer, Telemetry)
 
 __all__ = ["Engine", "EngineConfig", "OversubConfig", "SLOPolicy",
            "BlockPool", "BlockPoolError", "Request", "Scheduler",
            "prefix_hashes", "MetricsRegistry", "RecompileTracker",
-           "RequestTracer", "Telemetry"]
+           "RequestTracer", "Telemetry", "SpecConfig", "Drafter",
+           "NgramDrafter", "DraftModelDrafter", "ReplayDrafter"]

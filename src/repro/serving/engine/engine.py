@@ -73,8 +73,10 @@ from repro.core import parallelism as par
 from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import telemetry as TM
+from repro.serving.engine import spec as SPEC
 from repro.serving.engine.oversub import OversubConfig, SLOPolicy
 from repro.serving.engine.paged_cache import BlockPool
+from repro.serving.engine.spec import SpecConfig
 from repro.serving.engine.scheduler import (DECODING, FINISHED, PREFILLING,
                                             Request, Scheduler,
                                             chunk_buckets_for,
@@ -100,6 +102,9 @@ class EngineConfig:
     oversub: Optional[OversubConfig] = None   # optimistic admission + victim
                                         #   preemption (engine.oversub);
                                         #   None = conservative reservation
+    spec: Optional[SpecConfig] = None   # speculative decoding (engine.spec):
+                                        #   k-token draft + multi-query verify
+                                        #   replaces the one-token decode step
 
     def __post_init__(self):
         # keep the config hashable for the compiled-step cache even when a
@@ -113,6 +118,11 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
     the plan-less path so repeated Engine construction re-uses the compiled
     steps (mirrors serve._cached_decode_step)."""
     skinds = SP.state_kinds(cfg)
+    # speculative decoding enlarges every ring layer by the draft depth so a
+    # verify step's K in-flight positions never overwrite a key still inside
+    # someone's window — decode, prefill and verify must all index the ring
+    # with the SAME enlarged modulus, hence the shared `draft` here.
+    draft = e.spec.k - 1 if e.spec is not None else 0
 
     def in_plan(fn):
         @functools.wraps(fn)
@@ -130,7 +140,7 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
         attn_lens = jnp.where(active, seq_lens + 1, 0)
         logits, pool = T.paged_decode_step(
             cfg, params, pool, {"token": tokens}, tables, positions,
-            attn_lens, impl=e.attn_impl, interpret=e.interpret)
+            attn_lens, impl=e.attn_impl, interpret=e.interpret, draft=draft)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, logits, seq_lens + active, pool
 
@@ -141,9 +151,21 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
         # starts/valids/slots (G,). Padded segments carry valid == 0 and
         # slot == max_slots (OOB sentinel), so their writes all drop.
         logits, pool = T.paged_prefill_packed(
-            cfg, params, pool, tokens, tables, starts, valids, slots)
+            cfg, params, pool, tokens, tables, starts, valids, slots,
+            draft=draft)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, logits, pool
+
+    verify_fn = None
+    if e.spec is not None:
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        @in_plan
+        def verify_fn(params, pool, tokens, tables, seq_lens, active, qlims):
+            # one dispatch verifies K tokens per slot and computes the
+            # greedy acceptance run in-jit (spec.verify_step)
+            return SPEC.verify_step(
+                cfg, params, pool, tokens, tables, seq_lens, active, qlims,
+                impl=e.attn_impl, interpret=e.interpret)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def copy_block_fn(pool, src, dst):
@@ -165,18 +187,21 @@ def _build_step_fns(cfg, e: EngineConfig, plan):
             out[f"l{i}"] = st
         return out
 
-    return decode_fn, prefill_fn, copy_block_fn, reset_slot_fn
+    return decode_fn, prefill_fn, copy_block_fn, reset_slot_fn, verify_fn
 
 
 def _step_fn_key(e: EngineConfig) -> EngineConfig:
     """Host-only fields (scheduler policy, prefix caching, telemetry, bucket
     declarations) are never read by the traced functions — the traced shapes
     come from the call-time arrays — so normalize them out of the
-    compile-cache key and toggling them reuses the compiled steps."""
+    compile-cache key and toggling them reuses the compiled steps. Of the
+    spec config only k matters (it sets the ring modulus and the verify
+    tokens width); the drafter is pure host state."""
+    spec = SpecConfig(k=e.spec.k) if e.spec is not None else None
     return dataclasses.replace(e, prefix_caching=True, prefills_per_step=1,
                                telemetry=True, step_timing=False,
                                prefill_buckets=(), packed_prefill=True,
-                               oversub=None)
+                               oversub=None, spec=spec)
 
 
 @functools.lru_cache(maxsize=None)
@@ -194,13 +219,19 @@ class Engine:
         self.params = params
         e = self.ecfg
 
+        # speculative decoding: the drafter is host-only per-engine state;
+        # the device sees only k (verify tokens width + ring slack)
+        self.spec = e.spec
+        self.drafter = e.spec.build_drafter() if e.spec is not None else None
+
         # one state provider per superblock layer (models.state_providers):
         # paged full-attention KV, ring-paged sliding-window KV, or per-slot
         # recurrent slabs. The providers drive device-state init, per-kind
         # block costs for admission, and defrag remapping.
         self.providers = SP.providers_for(
             cfg, num_blocks=e.num_blocks, block_size=e.block_size,
-            max_slots=e.max_slots, max_blocks_per_seq=e.max_blocks_per_seq)
+            max_slots=e.max_slots, max_blocks_per_seq=e.max_blocks_per_seq,
+            draft=e.spec.k - 1 if e.spec is not None else 0)
         self.state_kinds = [p.kind for p in self.providers]
         self._has_recurrent = any(k in ("rwkv", "mamba")
                                   for k in self.state_kinds)
@@ -250,6 +281,15 @@ class Engine:
         self._m_prefill_deferrals = reg.counter(
             "engine_prefill_deferrals_total",
             "steps that skipped prefill under SLO/pool pressure")
+        self._m_verify_steps = reg.counter(
+            "engine_verify_steps_total", "speculative verify steps dispatched")
+        self._m_draft = reg.counter(
+            "engine_draft_tokens_total", "draft tokens proposed for verify")
+        self._m_accepted = reg.counter(
+            "engine_accepted_tokens_total", "draft tokens accepted by verify")
+        self._h_accept = reg.histogram(
+            "engine_spec_acceptance_rate",
+            "per verify step: accepted drafts / proposed drafts")
         self._g_waiting = reg.gauge(
             "engine_waiting_requests", "requests queued awaiting admission")
         self._g_running = reg.gauge(
@@ -319,11 +359,11 @@ class Engine:
         self.requests: dict = {}        # rid -> Request (all ever submitted)
 
         if plan is None:
-            self._decode, self._prefill, self._copy_block, self._reset_slot = \
-                _cached_step_fns(cfg, _step_fn_key(self.ecfg))
+            (self._decode, self._prefill, self._copy_block, self._reset_slot,
+             self._verify) = _cached_step_fns(cfg, _step_fn_key(self.ecfg))
         else:
-            self._decode, self._prefill, self._copy_block, self._reset_slot = \
-                _build_step_fns(cfg, self.ecfg, plan)
+            (self._decode, self._prefill, self._copy_block, self._reset_slot,
+             self._verify) = _build_step_fns(cfg, self.ecfg, plan)
         if self.telemetry.enabled:
             # count unique trace keys per jitted step fn (the compiled-variant
             # metric the AOT warmup must hold at "declared set, counted up
@@ -334,8 +374,11 @@ class Engine:
             self._prefill = wrap("prefill", self._prefill)
             self._copy_block = wrap("copy_block", self._copy_block)
             self._reset_slot = wrap("reset_slot", self._reset_slot)
+            if self._verify is not None:
+                self._verify = wrap("verify", self._verify)
         self._step_device_s = 0.0
         self._warmup_prefill()
+        self._warmup_verify()
 
     def _warmup_prefill(self) -> None:
         """Drive every declared (chunk x segments) prefill bucket through the
@@ -352,6 +395,23 @@ class Engine:
                 self.tables, jnp.zeros((g,), jnp.int32),
                 jnp.zeros((g,), jnp.int32),
                 jnp.full((g,), e.max_slots, jnp.int32))
+
+    def _warmup_verify(self) -> None:
+        """Compile the (single) verify variant at construction, same
+        all-padding trick as ``_warmup_prefill``: every slot inactive means
+        qlims == 0 so every paged write drops and every recurrent slot keeps
+        its old state — the donated pool round-trips bit-identical. Serving
+        then never traces a new verify variant (the verify batch is always
+        the full (max_slots, k) shape)."""
+        if self._verify is None:
+            return
+        e = self.ecfg
+        z = jnp.zeros((e.max_slots,), jnp.int32)
+        _, _, _, _, self.pool_state = self._device_call(
+            "engine/warmup_verify", self._verify,
+            self.params, self.pool_state,
+            jnp.zeros((e.max_slots, e.spec.k), jnp.int32), self.tables,
+            z, jnp.zeros((e.max_slots,), bool), z)
 
     @property
     def stats(self) -> dict:
@@ -572,7 +632,9 @@ class Engine:
         if pol is not None:
             self._grow_decode()
         batch = self.scheduler.decode_batch()
-        if batch:
+        if batch and self._verify is not None:
+            emitted.extend(self._spec_decode(batch, sync_memo))
+        elif batch:
             greedy, logits, self.seq_lens, self.pool_state = self._device_call(
                 "engine/decode", self._decode,
                 self.params, self.pool_state, self.next_tok, self.tables,
@@ -671,7 +733,7 @@ class Engine:
         for req in order:
             if req.rid not in sched.running:
                 continue                # became a victim earlier this pass
-            need = sched.growth_need(req)
+            need = sched.growth_need(req, extra=self._spec_horizon(req))
             if need == 0:
                 continue
             while not self.block_pool.can_alloc(need):
@@ -683,7 +745,7 @@ class Engine:
                 if victim is None:
                     break
             if req.rid in sched.running:
-                fresh = sched.grow(req)
+                fresh = sched.grow(req, extra=self._spec_horizon(req))
                 old = len(self.block_pool.table(req.rid)) - len(fresh)
                 self.tables = self.tables.at[
                     req.slot, old:old + len(fresh)].set(
@@ -724,6 +786,8 @@ class Engine:
                                 else req.prefilled)
         self.active = self.active.at[req.slot].set(False)
         blocks = len(self.block_pool.table(req.rid))
+        if self.drafter is not None:
+            self.drafter.forget(req.rid)
         self.scheduler.preempt(req)
         self._m_preempts.inc()
         self.telemetry.record(req.rid, "preempt",
@@ -740,6 +804,90 @@ class Engine:
         return True
 
     # ------------------------------------------------------------- internal
+    def _spec_decode(self, batch: list, sync_memo: dict) -> list:
+        """One speculative decode step over the DECODING batch: host
+        drafting, ONE jitted verify dispatch covering k tokens per slot,
+        then a host sync of the (greedy, accepts) pair to record each
+        accepted run. Spec mode inherently syncs every step — acceptance
+        decides how many tokens exist, so lazy step-vector refs can't
+        represent the output — which is why verify must emit > 1 token per
+        step on average to win.
+
+        Per slot the verify row is ``[pending, d1 .. d_{k-1}]``: the last
+        emitted (true) token plus the drafter's guesses for the next k-1
+        stream positions. ``qlims`` caps accepted tokens AND KV writes at
+        what the request may still emit, so writes never pass the block
+        reservation; temperature requests run with qlims == 1 (one
+        guaranteed token whose value the host samples — the device only
+        commits the pending token's KV, which is correct regardless of the
+        sampled value)."""
+        e = self.ecfg
+        tel = self.telemetry
+        k = e.spec.k
+        emitted = []
+        tokens = np.zeros((e.max_slots, k), np.int32)
+        qlims = np.zeros((e.max_slots,), np.int32)
+        plans = []
+        for req in batch:
+            # drafting needs the concrete stream: materialize any lazy
+            # step-vector refs (at most this step's prefill-completion token)
+            if any(isinstance(t, tuple) for t in req.out_tokens):
+                req.out_tokens = [int(t) for t in
+                                  self._materialize(req, sync_memo)]
+            q = (1 if req.temperature > 0.0
+                 else min(k, req.max_new - len(req.out_tokens)))
+            ctx = np.concatenate([req.prompt,
+                                  np.asarray(req.out_tokens, np.int32)])
+            tokens[req.slot, 0] = ctx[-1]
+            if q > 1:
+                tokens[req.slot, 1:] = self.drafter.propose(
+                    req.rid, ctx, k - 1)
+            qlims[req.slot] = q
+            plans.append((req, q))
+        greedy, accepts, logits, self.seq_lens, self.pool_state = \
+            self._device_call(
+                "engine/verify", self._verify,
+                self.params, self.pool_state, jnp.asarray(tokens),
+                self.tables, self.seq_lens, self.active, jnp.asarray(qlims))
+        g_host = np.asarray(greedy)
+        a_host = np.asarray(accepts)
+        self._m_step_syncs.inc()
+        self._m_decode_steps.inc()
+        self._m_verify_steps.inc()
+        self._m_occupancy.inc(len(batch) / e.max_slots)
+        for req, q in plans:
+            a = int(a_host[req.slot])
+            toks = [int(t) for t in g_host[req.slot, :a]]
+            if req.temperature > 0.0:
+                req.key, sub = jax.random.split(req.key)
+                toks = [int(jax.random.categorical(
+                    sub, logits[req.slot, 0] / req.temperature))]
+            if req.stop_token is not None and req.stop_token in toks:
+                # truncate at the stop token; the device advanced past it
+                # but the slot is freed below, so the overrun is unreachable
+                toks = toks[:toks.index(req.stop_token) + 1]
+            req.out_tokens.extend(toks)
+            emitted.append(req.rid)
+            drafted, accepted = max(q - 1, 0), max(a - 1, 0)
+            self._m_draft.inc(drafted)
+            self._m_accepted.inc(accepted)
+            if drafted:
+                self._h_accept.observe(accepted / drafted)
+            tel.record(req.rid, "verify", drafted=drafted, accepted=accepted)
+            tel.record(req.rid, "decode_token", tokens=len(toks))
+            self._m_emitted.inc(len(toks) - 1)    # step() adds 1 per rid
+            if req.done:
+                self._finish(req)
+        return emitted
+
+    def _spec_horizon(self, req: Request) -> int:
+        """Extra block-growth horizon under speculation: the next verify
+        step writes KV at positions ``seq_tokens-1 .. seq_tokens-2+qlims``,
+        i.e. qlims-1 tokens past what the one-token decode step writes."""
+        if self._verify is None or req.temperature > 0.0:
+            return 0
+        return min(self.ecfg.spec.k, req.max_new - len(req.out_tokens)) - 1
+
     def _record_token(self, req: Request, greedy_vec, greedy_idx,
                       logits, logits_idx, sync_memo: dict):
         """Record the request's next token. Greedy requests store a
@@ -772,6 +920,8 @@ class Engine:
 
     def _finish(self, req: Request) -> None:
         self.active = self.active.at[req.slot].set(False)
+        if self.drafter is not None:
+            self.drafter.forget(req.rid)
         self.scheduler.finish(req)
         tel = self.telemetry
         if tel.enabled:

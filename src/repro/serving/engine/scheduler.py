@@ -309,19 +309,21 @@ class Scheduler:
             self.pool.register(req.rid, row[i], req.block_hashes[i])
             req.registered += 1
 
-    def growth_need(self, req: Request) -> int:
+    def growth_need(self, req: Request, extra: int = 0) -> int:
         """Fresh blocks `req` must append before its next decode write
         lands (0 when the current table already covers it). Provider-aware:
         ring layers stop growing once the ring is full, recurrent layers
-        never grow."""
-        return max(0, self.block_cost(req.seq_tokens)
+        never grow. ``extra`` widens the horizon past the one-token write —
+        a speculative verify step commits up to qlims tokens at once, so
+        the engine asks for qlims-1 extra."""
+        return max(0, self.block_cost(req.seq_tokens + extra)
                    - len(self.pool.table(req.rid)))
 
-    def grow(self, req: Request) -> list:
+    def grow(self, req: Request, extra: int = 0) -> list:
         """Append the blocks `growth_need` asks for (caller checked
         feasibility / preempted victims first). Returns the new block ids
         so the engine can extend the device table row."""
-        need = self.growth_need(req)
+        need = self.growth_need(req, extra)
         return self.pool.append(req.rid, need) if need else []
 
     def preempt(self, req: Request) -> None:

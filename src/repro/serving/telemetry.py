@@ -54,13 +54,16 @@ import numpy as np
 # ``defrag`` are pool-wide events recorded with ``rid=None``. ``preempt`` /
 # ``resume`` bracket an oversubscription rollback: the victim's state is
 # evicted and it re-enters the prefill phase on resume, so the rank machine
-# in ``validate_order`` resets at each ``resume``.
+# in ``validate_order`` resets at each ``resume``. ``verify`` is the
+# speculative-decoding acceptance record (drafted/accepted counts); it ranks
+# WITH ``decode_token`` — each verify step emits both, in either order.
 EVENTS = ("arrive", "admit", "prefix_hit", "prefill_chunk", "first_token",
-          "decode_token", "preempt", "resume", "evict", "defrag", "finish")
+          "verify", "decode_token", "preempt", "resume", "evict", "defrag",
+          "finish")
 
 _LIFECYCLE_RANK = {"arrive": 0, "admit": 1, "resume": 1, "prefix_hit": 2,
-                   "prefill_chunk": 3, "first_token": 4, "decode_token": 5,
-                   "preempt": 6, "finish": 7}
+                   "prefill_chunk": 3, "first_token": 4, "verify": 5,
+                   "decode_token": 5, "preempt": 6, "finish": 7}
 _ONCE = ("arrive", "admit", "first_token", "finish")
 
 
@@ -291,11 +294,16 @@ def derive_timeline(events) -> dict:
     view — ``preempts`` (rollback count) and ``preempted_s`` (total time
     spent evicted, summed over matched preempt→resume pairs; a stream that
     ends while still evicted contributes its open interval up to the last
-    event's timestamp)."""
+    event's timestamp). Speculative decoding: a ``decode_token`` event may
+    carry ``tokens=n`` (the accepted run of one verify step) — the decode
+    timeline counts every ACCEPTED token, n entries at that timestamp, so
+    TPOT statistics stay per-token rather than per-engine-step; drafted /
+    accepted totals are summed from the ``verify`` events."""
     tl = {"events": list(events), "arrive": None, "admit": None,
           "first_token": None, "finish": None, "prefill_chunks": 0,
           "decode_tokens": [], "prefix_hit_tokens": 0,
-          "preempts": 0, "preempted_s": 0.0}
+          "preempts": 0, "preempted_s": 0.0,
+          "draft_tokens": 0, "accepted_tokens": 0}
     pend = None                        # open preempt awaiting its resume
     for ev in events:
         if ev.name in _ONCE and tl[ev.name] is None:
@@ -303,7 +311,11 @@ def derive_timeline(events) -> dict:
         elif ev.name == "prefill_chunk":
             tl["prefill_chunks"] += 1
         elif ev.name == "decode_token":
-            tl["decode_tokens"].append(ev.t)
+            tl["decode_tokens"].extend(
+                [ev.t] * (ev.data or {}).get("tokens", 1))
+        elif ev.name == "verify":
+            tl["draft_tokens"] += (ev.data or {}).get("drafted", 0)
+            tl["accepted_tokens"] += (ev.data or {}).get("accepted", 0)
         elif ev.name == "prefix_hit":
             # cumulative over resumes: a rollback's re-admission usually
             # re-aliases the blocks registered at preemption

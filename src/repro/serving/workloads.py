@@ -32,7 +32,7 @@ from dataclasses import dataclass
 import numpy as np
 
 __all__ = ["Arrival", "mixed_workload", "shared_prefix_workload",
-           "open_loop_arrivals"]
+           "spec_workload", "open_loop_arrivals"]
 
 
 def mixed_workload(n: int = 24, seed: int = 0, vocab: int = 256):
@@ -62,6 +62,23 @@ def shared_prefix_workload(n: int = 24, seed: int = 0, prefix_len: int = 96,
         prompts.append(np.concatenate([prefix, tail]))
         news.append(int(rng.integers(8, 17)))
     return prompts, news, prefix
+
+
+def spec_workload(n: int = 8, seed: int = 0, vocab: int = 256):
+    """Speculation-friendly decode-heavy traffic: short prompts built from
+    small repeating token patterns (period 2-4) and long generation budgets,
+    so the run is dominated by decode steps and the n-gram drafter's
+    prompt-lookahead has literal earlier occurrences to extend. Returns
+    (prompts, max_news)."""
+    rng = np.random.default_rng(seed)
+    prompts, news = [], []
+    for _ in range(n):
+        period = int(rng.integers(2, 5))
+        pat = rng.integers(0, vocab, size=period).astype(np.int32)
+        length = int(rng.integers(8, 17))
+        prompts.append(np.tile(pat, length // period + 1)[:length])
+        news.append(int(rng.integers(48, 97)))
+    return prompts, news
 
 
 @dataclass(frozen=True)

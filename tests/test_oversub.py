@@ -151,16 +151,26 @@ def test_blockpool_append_evict_episode(seed):
                     pool.register(rid, row[i], hashes[i])
         elif op < 0.65 and owners:                # decode growth: append
             rid = rng.choice(sorted(owners))
-            n = rng.randint(1, 2)
+            # multi-block appends in ONE call: a speculative verify step can
+            # commit up to k tokens at once, so growth may need several
+            # blocks per step, all-or-nothing
+            n = rng.randint(1, 4)
             if pool.can_alloc(n):
                 fresh = pool.append(rid, n)
-                assert len(fresh) == n
+                assert len(fresh) == n == len(set(fresh))
+                assert not (set(fresh)
+                            & {b for t in owners.values() for b in t})
                 owners[rid].extend(fresh)
                 tokens[rid] = tokens[rid] + [rng.randrange(5)
                                              for _ in range(n * bs)]
             else:
+                before = list(pool.table(rid))
+                free_before = pool.num_free
                 with pytest.raises(Exception):
                     pool.append(rid, n)
+                # failed append mutates nothing: no partial block grants
+                assert pool.table(rid) == before
+                assert pool.num_free == free_before
         elif op < 0.90 and owners:                # victim: register then evict
             rid = rng.choice(sorted(owners))
             hashes = prefix_hashes(np.asarray(tokens[rid], np.int32), bs)

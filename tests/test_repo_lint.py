@@ -8,7 +8,15 @@ state. Likewise any touch of a pool-internal structure (``pool._ref``,
 ``pool._free`` ...) outside paged_cache.py/oversub.py bypasses the
 refcount/prefix-index invariants that preemption's register-then-evict
 discipline depends on — callers get alloc/append/share/evict_seq/free_seq,
-never the books."""
+never the books.
+
+Speculative decoding adds two more fenced stores: per-request draft cursors
+(``_draft_state``, owned by the drafters in engine/spec.py) and the verify
+scan's recurrent rollback checkpoints (selected only by
+``state_providers.select_checkpoint``). Anything else reaching into either
+would fork mutable speculation state outside the modules whose invariants
+(forget-on-preempt, checkpoint-per-draft-position) keep resume and rollback
+exact."""
 import pathlib
 import re
 
@@ -17,6 +25,7 @@ import pytest
 pytestmark = [pytest.mark.serving, pytest.mark.telemetry]
 
 SERVING = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "serving"
+MODELS = SERVING.parent / "models"
 
 # .stats[...] followed by an (augmented) assignment; `==` comparisons and
 # plain reads don't match because they aren't followed by an assignment op.
@@ -73,6 +82,45 @@ def test_no_pool_internal_access_outside_paged_cache():
         "direct pool-internal access found (use the BlockPool API — "
         "alloc/append/share/register/evict_seq/free_seq):\n"
         + "\n".join(offenders))
+
+
+_SPEC_STATE = re.compile(r"\._draft_state\b|select_checkpoint\s*\(")
+_SPEC_ALLOWED = ("spec.py", "state_providers.py")
+
+
+def test_spec_state_stays_in_spec_and_state_providers():
+    """Draft cursors live in the drafters (engine/spec.py); recurrent
+    rollback checkpoints are selected only by state_providers. The engine
+    talks to both through propose/forget and verify_step."""
+    offenders = []
+    for root in (SERVING, MODELS):
+        assert root.is_dir()
+        for path in sorted(root.rglob("*.py")):
+            if path.name in _SPEC_ALLOWED:
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if _SPEC_STATE.search(line):
+                    offenders.append(f"{path.relative_to(root.parent)}:"
+                                     f"{lineno}: {line.strip()}")
+    assert not offenders, (
+        "speculative-decoding state touched outside engine/spec.py / "
+        "state_providers.py (use Drafter.propose/forget and "
+        "spec.verify_step):\n" + "\n".join(offenders))
+
+
+def test_spec_lint_regex_catches_the_banned_patterns():
+    bad = ["drafter._draft_state[rid] = 3",
+           "del self.drafter._draft_state[rid]",
+           "cp = SP.select_checkpoint(aux, accepts, old)",
+           "state_providers.select_checkpoint (checkpoints, a, o)"]
+    good = ["self.drafter.forget(rid)",
+            "drafter.propose(rid, ctx, k - 1)",
+            "self._draft_state2 = {}",
+            "checkpoint = select_checkpoints[0]"]
+    for s in bad:
+        assert _SPEC_STATE.search(s), s
+    for s in good:
+        assert not _SPEC_STATE.search(s), s
 
 
 def test_pool_lint_regex_catches_the_banned_patterns():
