@@ -12,7 +12,10 @@ per-family state-provider sweep; `--serving-seed` seeds every serving
 workload generator (request lengths, arrival trace);
 `--serving-trace-out PREFIX` writes each workload's request-lifecycle event
 log to PREFIX.<workload>.jsonl (replayable via
-repro.serving.telemetry.replay_jsonl)."""
+repro.serving.telemetry.replay_jsonl). `--serving-kv-quant` adds the
+quantized paged-KV rows: per-family tokens/s and state-KB/slot with the
+pools fp32 vs int8+scales, the paged kernel's dequant overhead in
+isolation, and peak resident sequences at a fixed pool byte budget."""
 import argparse
 import sys
 import traceback
@@ -51,6 +54,10 @@ def main(argv=None) -> None:
                     help="speculative-decoding rows for serving_bench "
                          "(per-family spec on/off tokens/s, acceptance rate, "
                          "tokens per verify step)")
+    ap.add_argument("--serving-kv-quant", action="store_true",
+                    help="quantized-KV rows for serving_bench (per-family "
+                         "tokens/s and state-KB/slot fp32 vs int8, kernel "
+                         "dequant overhead, fixed-budget pool capacity)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
@@ -59,7 +66,8 @@ def main(argv=None) -> None:
                    "config_family": args.serving_family,
                    "trace_out": args.serving_trace_out,
                    "seed": args.serving_seed,
-                   "spec": args.serving_spec}
+                   "spec": args.serving_spec,
+                   "kv_quant": args.serving_kv_quant}
                   if mod_name == "benchmarks.serving_bench" else {})
         try:
             mod = __import__(mod_name, fromlist=["main"])

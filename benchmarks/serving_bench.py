@@ -61,6 +61,17 @@ self-drafting prompt-lookahead. Greedy outputs are asserted bit-identical
 on/off inside the bench, and each on-run reports its verify variant count
 (must stay 1: the AOT-warmed shape).
 
+Quantized-KV rows (`--kv-quant` / `benchmarks/run.py --serving-kv-quant`):
+per KV-holding family (full / sliding / hybrid), engine tokens/s and
+per-slot state memory with the paged pools stored fp32 vs int8 + per-vector
+scales (`EngineConfig.kv_quant`); a kernel-isolation row timing the paged
+decode kernel on identical pool contents fp32 vs int8 (the in-kernel
+dequant-multiply overhead); and pool-capacity rows that hold the pool BYTE
+budget fixed and report peak resident sequences on the mixed and
+shared-prefix workloads — the memory win the quantization buys back as
+batch capacity. Each quant run asserts its decode variant count stayed at
+the single AOT-warmed shape.
+
 `main(workload=...)` accepts "mixed" | "shared" | "oversub" | "both" (all
 three); `benchmarks/run.py --serving-workload` passes it through
 (`--serving-family` likewise forwards the family sweep, `--serving-seed`
@@ -82,8 +93,8 @@ from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import serve
 from repro.serving import workloads as W
-from repro.serving.engine import (Engine, EngineConfig, OversubConfig,
-                                  ReplayDrafter, SpecConfig)
+from repro.serving.engine import (Engine, EngineConfig, KVQuantConfig,
+                                  OversubConfig, ReplayDrafter, SpecConfig)
 
 FAMILIES = ("full", "sliding", "ssm", "hybrid")
 
@@ -587,8 +598,143 @@ def _main_spec(trace_out=None, seed=0):
     emit("serving_spec_ngram_acceptance", None, f"{rate:.3f}")
 
 
+KVQ_FAMILIES = ("full", "sliding", "hybrid")   # ssm holds no KV to quantize
+KVQ_CAP_BLOCKS = 32  # fixed pool byte budget for the capacity rows (fp32)
+
+
+def _kvq_ecfg(kv_quant, *, num_blocks=128, max_slots=MAX_SLOTS):
+    return EngineConfig(block_size=8, num_blocks=num_blocks,
+                        max_blocks_per_seq=16, max_slots=max_slots,
+                        prefill_chunk=16, prefills_per_step=2,
+                        kv_quant=kv_quant)
+
+
+def _run_kvq(cfg, params, prompts, max_news, ecfg):
+    """Two passes (first warms the compile caches); returns the measured
+    pass's (engine, tokens, wall, peak resident sequences)."""
+    def once():
+        eng = Engine(cfg, params, ecfg)
+        for p, mn in zip(prompts, max_news):
+            eng.add_request(p, mn)
+        peak = 0
+        t0 = time.perf_counter()
+        while eng.scheduler.has_work:
+            eng.step()
+            peak = max(peak, len(eng.scheduler.running))
+        outs = eng.drain()
+        wall = time.perf_counter() - t0
+        return eng, sum(o.shape[0] for o in outs.values()), wall, peak
+    once()
+    return once()
+
+
+def _kvq_kernel_overhead(mode, kvq_bits=8, iters=20):
+    """Direct kernel timing: the paged decode kernel on the same pool
+    contents, fp32 vs int8+scales — the dequant-multiply overhead in
+    isolation (full mode for the dense family, ring mode for sliding)."""
+    from repro.kernels.paged_attention import ops as PA
+    from repro.kernels.quantize import quantize_kv
+    B, Hq, Hkv, hd, bs, N, P = 8, 4, 2, 64, 16, 64, 8
+    key = jax.random.PRNGKey(0)
+    kk, kv_, kq = jax.random.split(key, 3)
+    k_pool = jax.random.normal(kk, (N, bs, Hkv, hd), jnp.float32)
+    v_pool = jax.random.normal(kv_, (N, bs, Hkv, hd), jnp.float32)
+    q = jax.random.normal(kq, (B, Hq, hd), jnp.float32)
+    tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P) % N
+    lens = jnp.full((B,), P * bs, jnp.int32)
+    kw = {}
+    if mode == "ring":
+        kw = dict(window=bs * (P - 1), positions=lens - 1, ring_pages=P)
+    qk, sk = quantize_kv(k_pool)
+    qv, sv = quantize_kv(v_pool)
+
+    def time_call(fn):
+        jax.block_until_ready(fn())                 # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / iters
+
+    t_f32 = time_call(lambda: PA.paged_attention(q, k_pool, v_pool, tables,
+                                                 lens, **kw))
+    t_int8 = time_call(lambda: PA.paged_attention(q, qk, qv, tables, lens,
+                                                  k_scale=sk, v_scale=sv,
+                                                  **kw))
+    return t_f32, t_int8
+
+
+def _main_kv_quant(seed=0):
+    """Quantized paged KV rows (ROADMAP item 4): per family, engine tokens/s
+    and per-slot state memory with the pools fp32 vs int8+per-vector scales;
+    the dequant-overhead row times the paged kernel alone on identical pool
+    contents; the capacity rows hold the pool BYTE budget fixed (the fp32
+    row's pool, ~`KVQ_CAP_BLOCKS` blocks) and report peak resident
+    sequences on the mixed and shared-prefix workloads — the number int8
+    must lift >=1.8x. Decode variant counts are asserted flat (==1): quant
+    changes the traced pool pytree, so the warmup must have compiled it."""
+    kvq = KVQuantConfig()
+    prompts, max_news = W.mixed_workload(n=16, seed=seed + 4)
+    worst = max(p.shape[0] + m for p, m in zip(prompts, max_news))
+    for fam in KVQ_FAMILIES:
+        cfg = _family_cfg(fam)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        tps, kb = {}, {}
+        for tag, q in (("fp32", None), ("int8", kvq)):
+            eng, total, wall, _peak = _run_kvq(cfg, params, prompts,
+                                               max_news, _kvq_ecfg(q))
+            tps[tag] = total / wall
+            kb[tag] = SP.state_memory_per_slot(cfg, eng.providers, worst)
+            if q is not None:
+                dv = eng.telemetry.recompiles.unique("decode")
+                assert dv == 1, f"{fam}: {dv} decode variants with quant on"
+                snap = eng.telemetry.registry.snapshot()
+                emit(f"serving_kv_quant_{fam}_bytes_saved", None,
+                     str(int(snap["kv_quant_bytes_saved_total"])))
+                emit(f"serving_kv_quant_{fam}_decode_variants", None,
+                     str(dv))
+        emit(f"serving_kv_quant_{fam}_fp32_tokens_per_s", None,
+             f"{tps['fp32']:.1f}")
+        emit(f"serving_kv_quant_{fam}_int8_tokens_per_s",
+             1.0 / tps["int8"] * 1e6, f"{tps['int8']:.1f}")
+        emit(f"serving_kv_quant_{fam}_tokens_per_s_ratio", None,
+             f"{tps['int8'] / tps['fp32']:.2f}x")
+        emit(f"serving_kv_quant_{fam}_state_kb_per_slot", None,
+             f"{kb['int8'] / 1024:.1f} (fp32 {kb['fp32'] / 1024:.1f}, "
+             f"{kb['int8'] / kb['fp32']:.2f}x)")
+
+    # dequant overhead in isolation: kernel wall time on identical contents
+    for fam, mode in (("full", "full"), ("sliding", "ring")):
+        t_f32, t_int8 = _kvq_kernel_overhead(mode)
+        emit(f"serving_kv_quant_{fam}_kernel_overhead", None,
+             f"{t_int8 / t_f32:.2f}x ({t_int8 * 1e6:.0f}us vs "
+             f"{t_f32 * 1e6:.0f}us)")
+
+    # pool capacity at a fixed byte budget: the fp32 pool's bytes buy
+    # ~3.76x as many int8 blocks (2*hkv*hd*4 -> 2*hkv*(hd+4) per token)
+    cfg = _family_cfg("full")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    blocks_int8 = KVQ_CAP_BLOCKS * (2 * hkv * hd * 4) // (2 * hkv * (hd + 4))
+    for wname, (wp, wm) in (
+            ("mixed", W.mixed_workload(seed=seed)),
+            ("shared", W.shared_prefix_workload(seed=seed)[:2])):
+        res = {}
+        for tag, q, nb in (("fp32", None, KVQ_CAP_BLOCKS),
+                           ("int8", kvq, blocks_int8)):
+            _e, _t, _w, peak = _run_kvq(
+                cfg, params, wp, wm,
+                _kvq_ecfg(q, num_blocks=nb, max_slots=16))
+            res[tag] = peak
+        emit(f"serving_kv_quant_{wname}_max_resident_fp32", None,
+             f"{res['fp32']} ({KVQ_CAP_BLOCKS} blocks)")
+        emit(f"serving_kv_quant_{wname}_max_resident_int8", None,
+             f"{res['int8']} ({blocks_int8} blocks)")
+        emit(f"serving_kv_quant_{wname}_capacity_ratio", None,
+             f"{res['int8'] / max(res['fp32'], 1):.2f}x")
+
+
 def main(workload: str = "both", config_family: str = None, trace_out=None,
-         seed: int = 0, spec: bool = False):
+         seed: int = 0, spec: bool = False, kv_quant: bool = False):
     if workload not in ("mixed", "shared", "oversub", "both", "none"):
         raise ValueError(f"unknown workload {workload!r}")
     if workload != "none":
@@ -602,6 +748,8 @@ def main(workload: str = "both", config_family: str = None, trace_out=None,
             _main_oversub(trace_out, seed)
     if spec:
         _main_spec(trace_out, seed)
+    if kv_quant:
+        _main_kv_quant(seed)
     if config_family:
         fams = FAMILIES if config_family == "all" else (config_family,)
         for fam in fams:
@@ -619,6 +767,10 @@ if __name__ == "__main__":
     ap.add_argument("--spec", action="store_true",
                     help="also run the speculative-decoding rows (per-family "
                          "spec on/off, acceptance, tokens per verify step)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="also run the quantized-KV rows (per-family tokens/s"
+                         " and state-KB/slot fp32 vs int8, kernel dequant "
+                         "overhead, pool capacity at a fixed byte budget)")
     ap.add_argument("--trace-out", default=None, metavar="PREFIX",
                     help="write each workload's synced-pass event log to "
                          "PREFIX.<workload>.jsonl (replay via "
@@ -627,4 +779,4 @@ if __name__ == "__main__":
                     help="workload-generator seed (arrival trace, lengths)")
     args = ap.parse_args()
     main(args.workload, args.config_family, args.trace_out, args.seed,
-         args.spec)
+         args.spec, args.kv_quant)

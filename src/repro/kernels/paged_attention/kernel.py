@@ -38,8 +38,24 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                 m_ref, l_ref, acc_ref, *, scale, block_size, pages, groups):
+def _load_kv(ref, sref):
+    """Load one pool block (1, bs, Hkv, hd) as f32 (Hkv, bs, hd). When the
+    pool is int8 (`sref` holds per-(slot, head) scales, block (1, bs, Hkv)),
+    the dequant multiply happens here — inside the kernel, after the DMA — so
+    HBM traffic on the decode hot path is the int8 bytes, not f32."""
+    x = ref[0].astype(jnp.float32)
+    if sref is not None:
+        x = x * sref[0][..., None]                   # (bs, Hkv, 1) broadcast
+    return x.swapaxes(0, 1)
+
+
+def paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, *rest, scale,
+                 block_size, pages, groups, quant=False):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(1)
     seq_len = lens_ref[b]
@@ -55,8 +71,8 @@ def paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         H, hd = q_ref.shape[1], q_ref.shape[2]
         Hkv = H // groups
         q = q_ref[0].astype(jnp.float32).reshape(Hkv, groups, hd)
-        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)            # (Hkv, bs, hd)
-        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        k = _load_kv(k_ref, ks_ref)                                # (Hkv, bs, hd)
+        v = _load_kv(v_ref, vs_ref)
         # batched over kv heads: (Hkv, g, hd) x (Hkv, bs, hd) -> (Hkv, g, bs)
         s = jax.lax.dot_general(
             q, k, (((2,), (2,)), ((0,), (0,))),
@@ -82,9 +98,8 @@ def paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / denom).reshape(H, hd).astype(o_ref.dtype)
 
 
-def paged_verify_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                        m_ref, l_ref, acc_ref, *, scale, block_size, pages,
-                        groups, n_q):
+def paged_verify_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, *rest,
+                        scale, block_size, pages, groups, n_q, quant=False):
     """Multi-query verify body: grid (B, P), q block (1, n_q, H, hd).
 
     ``lens_ref[b]`` counts tokens INCLUDING the n_q draft tokens, so query
@@ -93,6 +108,11 @@ def paged_verify_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     the committed prefix. Online-softmax rows are laid out (Hkv, n_q*groups)
     so each row runs exactly the decode kernel's elementwise schedule;
     fully-masked pages leave (m, l, acc) bit-unchanged."""
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(1)
     seq_len = lens_ref[b]
@@ -113,8 +133,8 @@ def paged_verify_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
              .reshape(n_q, Hkv, groups, hd)
              .transpose(1, 0, 2, 3)
              .reshape(Hkv, rows, hd))
-        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)            # (Hkv, bs, hd)
-        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        k = _load_kv(k_ref, ks_ref)                                # (Hkv, bs, hd)
+        v = _load_kv(v_ref, vs_ref)
         s = jax.lax.dot_general(
             q, k, (((2,), (2,)), ((0,), (0,))),
             preferred_element_type=jnp.float32) * scale            # (Hkv, rows, bs)
@@ -145,13 +165,18 @@ def paged_verify_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_ring_verify_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref,
-                             v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
-                             block_size, pages, groups, window, n_q):
+                             v_ref, *rest, scale, block_size, pages, groups,
+                             window, n_q, quant=False):
     """Ring-mode multi-query verify body: grid (B, R). ``pos_ref[b]`` is the
     NEWEST draft position (``lens - 1``); query row j sits at
     ``pos - (n_q - 1) + j`` and is masked to its own sliding window. The
     caller must size the ring with ``draft = n_q - 1`` slack so the oldest
     query's window is still resident."""
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     r = pl.program_id(1)
     pos = pos_ref[b]
@@ -179,8 +204,8 @@ def paged_ring_verify_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref,
              .reshape(n_q, Hkv, groups, hd)
              .transpose(1, 0, 2, 3)
              .reshape(Hkv, rows, hd))
-        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)
-        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        k = _load_kv(k_ref, ks_ref)
+        v = _load_kv(v_ref, vs_ref)
         s = jax.lax.dot_general(
             q, k, (((2,), (2,)), ((0,), (0,))),
             preferred_element_type=jnp.float32) * scale
@@ -211,11 +236,16 @@ def paged_ring_verify_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref,
 
 
 def paged_ring_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref, v_ref,
-                      o_ref, m_ref, l_ref, acc_ref, *, scale, block_size,
-                      pages, groups, window):
+                      *rest, scale, block_size, pages, groups, window,
+                      quant=False):
     """Ring-mode body: grid (B, R). `pages` is the ring length R; `pos_ref`
     holds each sequence's current absolute position (scalar-prefetched so
     the index map can still walk the block table)."""
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     r = pl.program_id(1)
     pos = pos_ref[b]
@@ -238,8 +268,8 @@ def paged_ring_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref, v_ref,
         H, hd = q_ref.shape[1], q_ref.shape[2]
         Hkv = H // groups
         q = q_ref[0].astype(jnp.float32).reshape(Hkv, groups, hd)
-        k = k_ref[0].astype(jnp.float32).swapaxes(0, 1)            # (Hkv, bs, hd)
-        v = v_ref[0].astype(jnp.float32).swapaxes(0, 1)
+        k = _load_kv(k_ref, ks_ref)                                # (Hkv, bs, hd)
+        v = _load_kv(v_ref, vs_ref)
         s = jax.lax.dot_general(
             q, k, (((2,), (2,)), ((0,), (0,))),
             preferred_element_type=jnp.float32) * scale
@@ -267,19 +297,27 @@ def paged_ring_kernel(tables_ref, lens_ref, pos_ref, q_ref, k_ref, v_ref,
 
 def paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens, *,
                            scale=None, window=None, positions=None,
-                           ring_pages=None, interpret=False):
+                           ring_pages=None, k_scale=None, v_scale=None,
+                           interpret=False):
     """q: (B, H, hd); k_pool/v_pool: (N, bs, Hkv, hd) with H % Hkv == 0;
     block_tables: (B, P) int32; seq_lens: (B,) int32 (0 = inactive slot,
     current token already written to the pool). Returns (B, H, hd).
 
     window/positions/ring_pages (all three) switch to ring mode: the page
     grid axis becomes `ring_pages` and keys are masked to the sliding
-    window (positions - window, positions]."""
+    window (positions - window, positions].
+
+    k_scale/v_scale (both or neither): int8 pools with per-(slot, head) f32
+    scales (N, bs, Hkv), dequantized inside the kernel — the scale BlockSpecs
+    walk the same block table as the pools."""
     B, H, hd = q.shape
     N, bs, Hkv, _ = k_pool.shape
     P = block_tables.shape[1]
     groups = H // Hkv
     scale = scale if scale is not None else hd ** -0.5
+    quant = k_scale is not None
+    if quant != (v_scale is not None):
+        raise ValueError("k_scale and v_scale must be passed together")
 
     if window is not None:
         if positions is None or ring_pages is None:
@@ -287,17 +325,27 @@ def paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens, *,
         R = ring_pages
         kern = functools.partial(
             paged_ring_kernel, scale=scale, block_size=bs, pages=R,
-            groups=groups, window=window)
+            groups=groups, window=window, quant=quant)
+        in_specs = [
+            pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens, pos: (b, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+        ]
+        operands = [q, k_pool, v_pool]
+        if quant:
+            in_specs += [
+                pl.BlockSpec((1, bs, Hkv),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0)),
+                pl.BlockSpec((1, bs, Hkv),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0)),
+            ]
+            operands += [k_scale, v_scale]
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(B, R),
-            in_specs=[
-                pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens, pos: (b, 0, 0)),
-                pl.BlockSpec((1, bs, Hkv, hd),
-                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
-                pl.BlockSpec((1, bs, Hkv, hd),
-                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, H, hd),
                                    lambda b, p, tbl, lens, pos: (b, 0, 0)),
             scratch_shapes=[
@@ -311,21 +359,31 @@ def paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens, *,
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
             interpret=interpret,
-        )(block_tables, seq_lens, positions.astype(jnp.int32), q, k_pool,
-          v_pool)
+        )(block_tables, seq_lens, positions.astype(jnp.int32), *operands)
 
     kern = functools.partial(
-        paged_kernel, scale=scale, block_size=bs, pages=P, groups=groups)
+        paged_kernel, scale=scale, block_size=bs, pages=P, groups=groups,
+        quant=quant)
+    in_specs = [
+        pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens: (b, 0, 0)),
+        pl.BlockSpec((1, bs, Hkv, hd),
+                     lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+        pl.BlockSpec((1, bs, Hkv, hd),
+                     lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, bs, Hkv),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0)),
+            pl.BlockSpec((1, bs, Hkv),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0)),
+        ]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, P),
-        in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens: (b, 0, 0)),
-            pl.BlockSpec((1, bs, Hkv, hd),
-                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
-            pl.BlockSpec((1, bs, Hkv, hd),
-                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, hd), lambda b, p, tbl, lens: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hkv, groups, 1), jnp.float32),
@@ -338,24 +396,29 @@ def paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, seq_lens, q, k_pool, v_pool)
+    )(block_tables, seq_lens, *operands)
 
 
 def paged_attention_verify_pallas(q, k_pool, v_pool, block_tables, seq_lens,
                                   *, scale=None, window=None, positions=None,
-                                  ring_pages=None, interpret=False):
+                                  ring_pages=None, k_scale=None, v_scale=None,
+                                  interpret=False):
     """Multi-query verify: q: (B, K, H, hd) — K draft queries per sequence,
     K/V already written (write-then-attend). ``seq_lens`` counts tokens
     INCLUDING the K draft tokens; query j attends keys up to position
     ``seq_lens - K + j``. Active slots must satisfy ``seq_lens >= K``.
     Ring mode: ``positions = seq_lens - 1`` (newest draft position) and the
-    ring must be sized with ``draft = K - 1`` slack. Returns (B, K, H, hd)."""
+    ring must be sized with ``draft = K - 1`` slack. Returns (B, K, H, hd).
+    k_scale/v_scale: int8-pool dequant scales, as in paged_attention_pallas."""
     B, K, H, hd = q.shape
     N, bs, Hkv, _ = k_pool.shape
     P = block_tables.shape[1]
     groups = H // Hkv
     rows = K * groups
     scale = scale if scale is not None else hd ** -0.5
+    quant = k_scale is not None
+    if quant != (v_scale is not None):
+        raise ValueError("k_scale and v_scale must be passed together")
 
     if window is not None:
         if positions is None or ring_pages is None:
@@ -363,18 +426,28 @@ def paged_attention_verify_pallas(q, k_pool, v_pool, block_tables, seq_lens,
         R = ring_pages
         kern = functools.partial(
             paged_ring_verify_kernel, scale=scale, block_size=bs, pages=R,
-            groups=groups, window=window, n_q=K)
+            groups=groups, window=window, n_q=K, quant=quant)
+        in_specs = [
+            pl.BlockSpec((1, K, H, hd),
+                         lambda b, p, tbl, lens, pos: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
+        ]
+        operands = [q, k_pool, v_pool]
+        if quant:
+            in_specs += [
+                pl.BlockSpec((1, bs, Hkv),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0)),
+                pl.BlockSpec((1, bs, Hkv),
+                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0)),
+            ]
+            operands += [k_scale, v_scale]
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(B, R),
-            in_specs=[
-                pl.BlockSpec((1, K, H, hd),
-                             lambda b, p, tbl, lens, pos: (b, 0, 0, 0)),
-                pl.BlockSpec((1, bs, Hkv, hd),
-                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
-                pl.BlockSpec((1, bs, Hkv, hd),
-                             lambda b, p, tbl, lens, pos: (tbl[b, p], 0, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, K, H, hd),
                                    lambda b, p, tbl, lens, pos: (b, 0, 0, 0)),
             scratch_shapes=[
@@ -388,22 +461,31 @@ def paged_attention_verify_pallas(q, k_pool, v_pool, block_tables, seq_lens,
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((B, K, H, hd), q.dtype),
             interpret=interpret,
-        )(block_tables, seq_lens, positions.astype(jnp.int32), q, k_pool,
-          v_pool)
+        )(block_tables, seq_lens, positions.astype(jnp.int32), *operands)
 
     kern = functools.partial(
         paged_verify_kernel, scale=scale, block_size=bs, pages=P,
-        groups=groups, n_q=K)
+        groups=groups, n_q=K, quant=quant)
+    in_specs = [
+        pl.BlockSpec((1, K, H, hd), lambda b, p, tbl, lens: (b, 0, 0, 0)),
+        pl.BlockSpec((1, bs, Hkv, hd),
+                     lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+        pl.BlockSpec((1, bs, Hkv, hd),
+                     lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, bs, Hkv),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0)),
+            pl.BlockSpec((1, bs, Hkv),
+                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0)),
+        ]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, P),
-        in_specs=[
-            pl.BlockSpec((1, K, H, hd), lambda b, p, tbl, lens: (b, 0, 0, 0)),
-            pl.BlockSpec((1, bs, Hkv, hd),
-                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
-            pl.BlockSpec((1, bs, Hkv, hd),
-                         lambda b, p, tbl, lens: (tbl[b, p], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, K, H, hd),
                                lambda b, p, tbl, lens: (b, 0, 0, 0)),
         scratch_shapes=[
@@ -417,4 +499,4 @@ def paged_attention_verify_pallas(q, k_pool, v_pool, block_tables, seq_lens,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, H, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, seq_lens, q, k_pool, v_pool)
+    )(block_tables, seq_lens, *operands)

@@ -22,28 +22,32 @@ def _on_tpu() -> bool:
 @partial(jax.jit, static_argnames=("interpret", "window", "ring_pages"))
 def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *,
                     window=None, positions=None, ring_pages=None,
-                    interpret=None):
+                    k_scale=None, v_scale=None, interpret=None):
     """q: (B, H, hd); k_pool/v_pool: (N, block_size, Hkv, hd); block_tables:
     (B, P) int32; seq_lens: (B,) int32 — valid tokens per sequence including
     the current one (0 marks an inactive slot). Ring mode: `window` and
     `ring_pages` are static, `positions` (B,) carries each sequence's
-    current absolute position. Returns (B, H, hd)."""
+    current absolute position. k_scale/v_scale: (N, block_size, Hkv) f32
+    dequant scales when the pools are int8. Returns (B, H, hd)."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     return paged_attention_pallas(q, k_pool, v_pool, block_tables, seq_lens,
                                   window=window, positions=positions,
-                                  ring_pages=ring_pages, interpret=interpret)
+                                  ring_pages=ring_pages, k_scale=k_scale,
+                                  v_scale=v_scale, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret", "window", "ring_pages"))
 def paged_attention_verify(q, k_pool, v_pool, block_tables, seq_lens, *,
                            window=None, positions=None, ring_pages=None,
-                           interpret=None):
+                           k_scale=None, v_scale=None, interpret=None):
     """Multi-query verify mode for speculative decoding. q: (B, K, H, hd) —
     K draft queries per sequence, all K/V already written. ``seq_lens``
     counts tokens INCLUDING the K drafts; query j attends causally up to
     position ``seq_lens - K + j``. Ring mode: ``positions = seq_lens - 1``
-    and the ring sized with ``draft = K - 1`` slack. Returns (B, K, H, hd)."""
+    and the ring sized with ``draft = K - 1`` slack. k_scale/v_scale: int8
+    dequant scales as in :func:`paged_attention`. Returns (B, K, H, hd)."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     return paged_attention_verify_pallas(
         q, k_pool, v_pool, block_tables, seq_lens, window=window,
-        positions=positions, ring_pages=ring_pages, interpret=interpret)
+        positions=positions, ring_pages=ring_pages, k_scale=k_scale,
+        v_scale=v_scale, interpret=interpret)

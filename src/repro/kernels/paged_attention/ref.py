@@ -68,6 +68,20 @@ def _masked_gqa_attend_multi(q, k, v, valid, scale):
     return out.reshape(B, K, H, hd).astype(q.dtype)
 
 
+def _gather_pool(pool, scl, tables, T):
+    """Gather pool blocks through a block table into (B, T, Hkv, hd) f32.
+    When ``scl`` (N, bs, Hkv) is given the pool is int8 and each vector is
+    dequantized with the same per-(slot, head) multiply as the Pallas
+    kernel's `_load_kv` — so ref-with-scales is bitwise identical to the ref
+    run on a pre-dequantized f32 pool."""
+    B = tables.shape[0]
+    Hkv, hd = pool.shape[2], pool.shape[3]
+    x = pool[tables].astype(jnp.float32)                 # (B, P, bs, Hkv, hd)
+    if scl is not None:
+        x = x * scl[tables][..., None]
+    return x.reshape(B, T, Hkv, hd)
+
+
 def ring_key_positions(positions, ring_pages, block_size):
     """Absolute position of every (ring slot, offset) pair, per sequence.
     positions: (B,) current absolute position. Returns (B, R*bs) int32;
@@ -83,21 +97,22 @@ def ring_key_positions(positions, ring_pages, block_size):
 
 def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
                         scale=None, window=None, positions=None,
-                        ring_pages=None):
+                        ring_pages=None, k_scale=None, v_scale=None):
     """q: (B, H, hd); k_pool/v_pool: (N, bs, Hkv, hd);
     block_tables: (B, P) int32; seq_lens: (B,) int32. Returns (B, H, hd).
 
     window/positions/ring_pages switch on ring mode (all three required):
     attend the sliding window (positions - window, positions] through the
-    ring block layout."""
+    ring block layout. k_scale/v_scale: int8-pool dequant scales
+    (N, bs, Hkv) f32."""
     B, H, hd = q.shape
     N, bs, Hkv, _ = k_pool.shape
     scale = scale if scale is not None else hd ** -0.5
 
     if window is None:
         P = block_tables.shape[1]
-        k = k_pool[block_tables].reshape(B, P * bs, Hkv, hd)
-        v = v_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+        k = _gather_pool(k_pool, k_scale, block_tables, P * bs)
+        v = _gather_pool(v_pool, v_scale, block_tables, P * bs)
         valid = jnp.arange(P * bs)[None, :] < seq_lens[:, None]
         return _masked_gqa_attend(q, k, v, valid, scale)
 
@@ -105,8 +120,8 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
         raise ValueError("ring mode needs window, positions AND ring_pages")
     R = ring_pages
     tables = block_tables[:, :R]
-    k = k_pool[tables].reshape(B, R * bs, Hkv, hd)
-    v = v_pool[tables].reshape(B, R * bs, Hkv, hd)
+    k = _gather_pool(k_pool, k_scale, tables, R * bs)
+    v = _gather_pool(v_pool, v_scale, tables, R * bs)
     kpos = ring_key_positions(positions, R, bs)                   # (B, R*bs)
     valid = ((kpos >= 0)
              & (kpos <= positions[:, None])
@@ -117,7 +132,7 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
 
 def paged_attention_verify_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
                                scale=None, window=None, positions=None,
-                               ring_pages=None):
+                               ring_pages=None, k_scale=None, v_scale=None):
     """Multi-query verify oracle for speculative decoding.
 
     q: (B, K, H, hd) — K draft queries per sequence. ``seq_lens[b]`` counts
@@ -139,8 +154,8 @@ def paged_attention_verify_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
 
     if window is None:
         P = block_tables.shape[1]
-        k = k_pool[block_tables].reshape(B, P * bs, Hkv, hd)
-        v = v_pool[block_tables].reshape(B, P * bs, Hkv, hd)
+        k = _gather_pool(k_pool, k_scale, block_tables, P * bs)
+        v = _gather_pool(v_pool, v_scale, block_tables, P * bs)
         kpos = jnp.arange(P * bs)
         valid = kpos[None, None, :] <= qpos[:, :, None]           # (B, K, P*bs)
         return _masked_gqa_attend_multi(q, k, v, valid, scale)
@@ -149,8 +164,8 @@ def paged_attention_verify_ref(q, k_pool, v_pool, block_tables, seq_lens, *,
         raise ValueError("ring mode needs window, positions AND ring_pages")
     R = ring_pages
     tables = block_tables[:, :R]
-    k = k_pool[tables].reshape(B, R * bs, Hkv, hd)
-    v = v_pool[tables].reshape(B, R * bs, Hkv, hd)
+    k = _gather_pool(k_pool, k_scale, tables, R * bs)
+    v = _gather_pool(v_pool, v_scale, tables, R * bs)
     kpos = ring_key_positions(positions, R, bs)                   # (B, R*bs)
     valid = ((kpos[:, None, :] >= 0)
              & (kpos[:, None, :] <= qpos[:, :, None])

@@ -1,2 +1,8 @@
-from repro.kernels.quantize.ops import quantize_blocks, dequantize_blocks  # noqa: F401
+from repro.kernels.quantize.ops import (  # noqa: F401
+    KVQuantConfig,
+    dequantize_blocks,
+    dequantize_kv,
+    quantize_blocks,
+    quantize_kv,
+)
 from repro.kernels.quantize.ref import quantize_blocks_ref  # noqa: F401

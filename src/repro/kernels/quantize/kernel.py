@@ -35,28 +35,49 @@ def quantize_kernel(x_ref, u_ref, q_ref, s_ref, *, maxq):
     s_ref[...] = scale[:, 0]
 
 
-def quantize_pallas(x, noise, *, bits=8, block_rows=256, interpret=False):
-    """x: (rows, block) f32; noise: same shape uniform[0,1).
-    Returns (q int8 (rows, block), scales f32 (rows,))."""
+def quantize_nearest_kernel(x_ref, q_ref, s_ref, *, maxq):
+    """Deterministic round-to-nearest-even body: no noise operand, so jitted
+    serving steps can quantize KV writes without threading PRNG keys. The
+    half-point bias nearest rounding introduces is irrelevant for KV storage
+    (no gradient-unbiasedness requirement) and replay stays reproducible."""
+    x = x_ref[...].astype(jnp.float32)               # (bm, block)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax == 0.0, 1.0, amax / maxq)
+    q = jnp.round(x / scale)                         # ties to even
+    q_ref[...] = jnp.clip(q, -maxq - 1, maxq).astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+def quantize_pallas(x, noise=None, *, bits=8, block_rows=256,
+                    mode="stochastic", interpret=False):
+    """x: (rows, block) f32; noise: same shape uniform[0,1) (stochastic mode
+    only — nearest mode takes no noise). Returns (q int8 (rows, block),
+    scales f32 (rows,))."""
     rows, block = x.shape
     block_rows = min(block_rows, rows)
     assert rows % block_rows == 0
     maxq = float(2 ** (bits - 1) - 1)
+    row_spec = pl.BlockSpec((block_rows, block), lambda i: (i, 0))
+    out_specs = [row_spec, pl.BlockSpec((block_rows,), lambda i: (i,))]
+    out_shape = [
+        jax.ShapeDtypeStruct((rows, block), jnp.int8),
+        jax.ShapeDtypeStruct((rows,), jnp.float32),
+    ]
+    if mode == "nearest":
+        kern = functools.partial(quantize_nearest_kernel, maxq=maxq)
+        return pl.pallas_call(
+            kern, grid=(rows // block_rows,), in_specs=[row_spec],
+            out_specs=out_specs, out_shape=out_shape, interpret=interpret)(x)
+    if mode != "stochastic":
+        raise ValueError(f"unknown quantize mode {mode!r}")
+    if noise is None:
+        raise ValueError("stochastic mode needs a noise operand")
     kern = functools.partial(quantize_kernel, maxq=maxq)
     return pl.pallas_call(
         kern,
         grid=(rows // block_rows,),
-        in_specs=[
-            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_rows, block), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((rows, block), jnp.int8),
-            jax.ShapeDtypeStruct((rows,), jnp.float32),
-        ],
+        in_specs=[row_spec, row_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x, noise)

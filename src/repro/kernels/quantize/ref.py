@@ -2,15 +2,19 @@
 import jax.numpy as jnp
 
 
-def quantize_blocks_ref(x, noise, bits=8):
-    """x, noise: (rows, block). Returns (q int8, scales f32)."""
+def quantize_blocks_ref(x, noise=None, bits=8, mode="stochastic"):
+    """x, noise: (rows, block); noise unused in nearest mode.
+    Returns (q int8, scales f32)."""
     maxq = float(2 ** (bits - 1) - 1)
     x = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
     scale = jnp.where(amax == 0.0, 1.0, amax / maxq)
     y = x / scale
-    lo = jnp.floor(y)
-    q = lo + (noise < (y - lo)).astype(jnp.float32)
+    if mode == "nearest":
+        q = jnp.round(y)
+    else:
+        lo = jnp.floor(y)
+        q = lo + (noise < (y - lo)).astype(jnp.float32)
     return (jnp.clip(q, -maxq - 1, maxq).astype(jnp.int8), scale[:, 0])
 
 

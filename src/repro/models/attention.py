@@ -17,9 +17,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.quantize import dequantize_kv, quantize_kv
 from repro.models import layers as L
 
 NEG_INF = -1e30
+
+
+def _quantize_pair(k, v):
+    """Quantize a K/V write for an int8 pool/cache: per-vector nearest-even
+    rounding, so every path (dense cache, paged prefill/decode/verify,
+    re-prefill after preemption) stores bit-identical values for the same
+    input vector — the invariant the engine's replay-equality tests rely on."""
+    qk, sk = quantize_kv(k)
+    qv, sv = quantize_kv(v)
+    return qk, sk, qv, sv
 
 
 # ------------------------------------------------------------------ params
@@ -141,14 +152,11 @@ def _chunked_attention(q, k, v, n_rep, scale, chunk, window):
 
 
 # ------------------------------------------------------------------- decode
-def init_kv_cache(cfg, batch, max_len, window=None):
+def init_kv_cache(cfg, batch, max_len, window=None, kv_quant=None):
+    from repro.models.state_providers import alloc_kv_pool
     hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     size = min(max_len, window) if window is not None else max_len
-    dt = L.dtype_of(cfg)
-    return {
-        "k": jnp.zeros((batch, size, hkv, hd), dt),
-        "v": jnp.zeros((batch, size, hkv, hd), dt),
-    }
+    return alloc_kv_pool((batch, size), hkv, hd, L.dtype_of(cfg), kv_quant)
 
 
 def attention_prefill(params, x, cache, cfg, *, window=None):
@@ -163,6 +171,14 @@ def attention_prefill(params, x, cache, cfg, *, window=None):
     if cfg.rope_mode == "mrope":
         positions = jnp.broadcast_to(positions[None], (3, B, S))
     q, k, v = _project_qkv(params, x, positions, cfg, window)
+    quant = "k_scale" in cache
+    if quant:
+        # attend the ROUND-TRIPPED values: the paged prefill reads its keys
+        # back from the int8 pool, so the dense reference must see the same
+        # quantization error for token-level parity
+        qk, sk, qv, sv = _quantize_pair(k, v)
+        k = dequantize_kv(qk, sk).astype(k.dtype)
+        v = dequantize_kv(qv, sv).astype(v.dtype)
     n_rep = h // hkv
     scale = 1.0 / np.sqrt(hd)
     out = _attend_full(q, k, v, n_rep, scale, cfg.attn_chunk, window)
@@ -172,10 +188,18 @@ def attention_prefill(params, x, cache, cfg, *, window=None):
     Sc = cache["k"].shape[1]
     keep = min(S, Sc)                       # ring slots are unique for the
     slots = (jnp.arange(S - keep, S)) % Sc  # last `keep` positions only
-    new_cache = {
-        "k": cache["k"].at[:, slots].set(k[:, S - keep:]),
-        "v": cache["v"].at[:, slots].set(v[:, S - keep:]),
-    }
+    if quant:
+        new_cache = {
+            "k": cache["k"].at[:, slots].set(qk[:, S - keep:]),
+            "v": cache["v"].at[:, slots].set(qv[:, S - keep:]),
+            "k_scale": cache["k_scale"].at[:, slots].set(sk[:, S - keep:]),
+            "v_scale": cache["v_scale"].at[:, slots].set(sv[:, S - keep:]),
+        }
+    else:
+        new_cache = {
+            "k": cache["k"].at[:, slots].set(k[:, S - keep:]),
+            "v": cache["v"].at[:, slots].set(v[:, S - keep:]),
+        }
     return out, new_cache
 
 
@@ -188,7 +212,9 @@ def paged_write(kv, k_new, v_new, block_tables, positions, active, *,
     block_tables: (B, P); positions: (B,) absolute token position;
     active: (B,) bool — inactive rows are dropped (OOB block id).
     ring_pages: sliding-window layers write page (pos // bs) % ring_pages
-    so the sequence never touches more than ring_pages blocks."""
+    so the sequence never touches more than ring_pages blocks. An int8 pool
+    (with "k_scale"/"v_scale") quantizes on write, scattering the scales at
+    the same (block, offset)."""
     N, bs = kv["k"].shape[0], kv["k"].shape[1]
     B = positions.shape[0]
     pages = positions // bs
@@ -197,6 +223,14 @@ def paged_write(kv, k_new, v_new, block_tables, positions, active, *,
     bids = block_tables[jnp.arange(B), pages]
     bids = jnp.where(active, bids, N)       # OOB => mode="drop"
     offs = positions % bs
+    if "k_scale" in kv:
+        qk, sk, qv, sv = _quantize_pair(k_new, v_new)
+        return {
+            "k": kv["k"].at[bids, offs].set(qk, mode="drop"),
+            "v": kv["v"].at[bids, offs].set(qv, mode="drop"),
+            "k_scale": kv["k_scale"].at[bids, offs].set(sk, mode="drop"),
+            "v_scale": kv["v_scale"].at[bids, offs].set(sv, mode="drop"),
+        }
     return {
         "k": kv["k"].at[bids, offs].set(k_new, mode="drop"),
         "v": kv["v"].at[bids, offs].set(v_new, mode="drop"),
@@ -222,14 +256,17 @@ def attention_decode_paged(params, x, kv, block_tables, positions, attn_lens,
     q, k_new, v_new = _project_qkv(params, x, pos_b1, cfg, window)
     kv = paged_write(kv, k_new[:, 0], v_new[:, 0], block_tables, positions,
                      attn_lens > 0, ring_pages=ring_pages)
+    scales = dict(k_scale=kv.get("k_scale"), v_scale=kv.get("v_scale"))
     if impl == "kernel":
         out = paged_attention(q[:, 0], kv["k"], kv["v"], block_tables,
                               attn_lens, window=window, positions=positions,
-                              ring_pages=ring_pages, interpret=interpret)
+                              ring_pages=ring_pages, interpret=interpret,
+                              **scales)
     else:
         out = paged_attention_ref(q[:, 0], kv["k"], kv["v"], block_tables,
                                   attn_lens, window=window,
-                                  positions=positions, ring_pages=ring_pages)
+                                  positions=positions, ring_pages=ring_pages,
+                                  **scales)
     out = out.reshape(B, 1, h * hd)
     return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
@@ -242,7 +279,8 @@ def paged_write_multi(kv, k_new, v_new, block_tables, positions, valid, *,
     block_tables: (B, P); positions: (B, K) absolute token positions;
     valid: (B, K) bool — invalid (rejected-horizon or inactive) writes are
     dropped (OOB block id) so pool contents stay canonical. ring_pages:
-    sliding-window layers write page (pos // bs) % ring_pages."""
+    sliding-window layers write page (pos // bs) % ring_pages. Int8 pools
+    quantize on write as in :func:`paged_write`."""
     N, bs = kv["k"].shape[0], kv["k"].shape[1]
     pages = positions // bs
     if ring_pages is not None:
@@ -250,6 +288,14 @@ def paged_write_multi(kv, k_new, v_new, block_tables, positions, valid, *,
     bids = jnp.take_along_axis(block_tables, pages, axis=1)       # (B, K)
     bids = jnp.where(valid, bids, N)        # OOB => mode="drop"
     offs = positions % bs
+    if "k_scale" in kv:
+        qk, sk, qv, sv = _quantize_pair(k_new, v_new)
+        return {
+            "k": kv["k"].at[bids, offs].set(qk, mode="drop"),
+            "v": kv["v"].at[bids, offs].set(qv, mode="drop"),
+            "k_scale": kv["k_scale"].at[bids, offs].set(sk, mode="drop"),
+            "v_scale": kv["v_scale"].at[bids, offs].set(sv, mode="drop"),
+        }
     return {
         "k": kv["k"].at[bids, offs].set(k_new, mode="drop"),
         "v": kv["v"].at[bids, offs].set(v_new, mode="drop"),
@@ -281,14 +327,16 @@ def attention_verify_paged(params, x, kv, block_tables, base, qlims, cfg, *,
                            ring_pages=ring_pages)
     attn_lens = jnp.where(qlims > 0, base + K, 0)
     newest = attn_lens - 1
+    scales = dict(k_scale=kv.get("k_scale"), v_scale=kv.get("v_scale"))
     if impl == "kernel":
         out = paged_attention_verify(
             q, kv["k"], kv["v"], block_tables, attn_lens, window=window,
-            positions=newest, ring_pages=ring_pages, interpret=interpret)
+            positions=newest, ring_pages=ring_pages, interpret=interpret,
+            **scales)
     else:
         out = paged_attention_verify_ref(
             q, kv["k"], kv["v"], block_tables, attn_lens, window=window,
-            positions=newest, ring_pages=ring_pages)
+            positions=newest, ring_pages=ring_pages, **scales)
     out = out.reshape(B, K, h * hd)
     return jnp.einsum("bsk,kd->bsd", out, params["wo"]), kv
 
@@ -317,15 +365,33 @@ def attention_prefill_paged(params, x, kv, table_rows, starts, valids, cfg):
     bids = jnp.where(
         valid, jnp.take_along_axis(table_rows, pos // bs, axis=1), N)
     offs = pos % bs
-    kv = {
-        "k": kv["k"].at[bids, offs].set(k, mode="drop"),
-        "v": kv["v"].at[bids, offs].set(v, mode="drop"),
-    }
+    if "k_scale" in kv:
+        qk, sk, qv, sv = _quantize_pair(k, v)
+        kv = {
+            "k": kv["k"].at[bids, offs].set(qk, mode="drop"),
+            "v": kv["v"].at[bids, offs].set(qv, mode="drop"),
+            "k_scale": kv["k_scale"].at[bids, offs].set(sk, mode="drop"),
+            "v_scale": kv["v_scale"].at[bids, offs].set(sv, mode="drop"),
+        }
+    else:
+        kv = {
+            "k": kv["k"].at[bids, offs].set(k, mode="drop"),
+            "v": kv["v"].at[bids, offs].set(v, mode="drop"),
+        }
 
+    # the gather-back below reads the (possibly quantized) pool contents, so
+    # every query attends the same values the decode kernel will later see
+    from repro.kernels.paged_attention.ref import _gather_pool
     P = table_rows.shape[1]
     n_rep = h // hkv
-    kk = _repeat_kv(kv["k"][table_rows].reshape(G, P * bs, hkv, hd), n_rep)
-    vv = _repeat_kv(kv["v"][table_rows].reshape(G, P * bs, hkv, hd), n_rep)
+    if "k_scale" in kv:
+        kk = _repeat_kv(
+            _gather_pool(kv["k"], kv["k_scale"], table_rows, P * bs), n_rep)
+        vv = _repeat_kv(
+            _gather_pool(kv["v"], kv["v_scale"], table_rows, P * bs), n_rep)
+    else:
+        kk = _repeat_kv(kv["k"][table_rows].reshape(G, P * bs, hkv, hd), n_rep)
+        vv = _repeat_kv(kv["v"][table_rows].reshape(G, P * bs, hkv, hd), n_rep)
     scale = 1.0 / np.sqrt(hd)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
     mask = jnp.arange(P * bs)[None, None, :] <= pos[:, :, None]   # (G, C, P*bs)
@@ -348,7 +414,8 @@ def attention_prefill_ring(params, x, kv, table_rows, starts, valids, cfg,
     read-then-write is required for correctness. Each query t attends the
     union of {its segment's pre-chunk ring keys} ∪ {its segment's chunk},
     masked to its window (t - window, t]. Returns (out (G,C,D), new kv)."""
-    from repro.kernels.paged_attention.ref import ring_key_positions
+    from repro.kernels.paged_attention.ref import (_gather_pool,
+                                                   ring_key_positions)
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     G, C = x.shape[0], x.shape[1]
     pos = starts[:, None] + jnp.arange(C)[None, :]                # (G, C)
@@ -356,6 +423,14 @@ def attention_prefill_ring(params, x, kv, table_rows, starts, valids, cfg,
     if cfg.rope_mode == "mrope":
         positions = jnp.broadcast_to(positions[None], (3, G, C))
     q, k, v = _project_qkv(params, x, positions, cfg, window)
+    quant = "k_scale" in kv
+    if quant:
+        # chunk keys are attended from registers (never re-read from the
+        # pool), so round-trip them explicitly for parity with the decode
+        # steps that WILL read them back quantized
+        qk, sk, qv, sv = _quantize_pair(k, v)
+        k = dequantize_kv(qk, sk).astype(k.dtype)
+        v = dequantize_kv(qv, sv).astype(v.dtype)
 
     N, bs = kv["k"].shape[0], kv["k"].shape[1]
     R = ring_pages
@@ -363,8 +438,12 @@ def attention_prefill_ring(params, x, kv, table_rows, starts, valids, cfg,
     # 1) gather each segment's ring as of starts-1 (before this chunk's
     # writes)
     ring_rows = table_rows[:, :R]                                 # (G, R)
-    old_k = kv["k"][ring_rows].reshape(G, R * bs, hkv, hd)
-    old_v = kv["v"][ring_rows].reshape(G, R * bs, hkv, hd)
+    if quant:
+        old_k = _gather_pool(kv["k"], kv["k_scale"], ring_rows, R * bs)
+        old_v = _gather_pool(kv["v"], kv["v_scale"], ring_rows, R * bs)
+    else:
+        old_k = kv["k"][ring_rows].reshape(G, R * bs, hkv, hd)
+        old_v = kv["v"][ring_rows].reshape(G, R * bs, hkv, hd)
     old_pos = ring_key_positions(starts - 1, R, bs)               # (G, R*bs)
     # entries the pre-chunk ring never held: pages < 0 entirely, and the
     # current page's offsets past (start-1) % bs (previous-lap leftovers,
@@ -383,10 +462,18 @@ def attention_prefill_ring(params, x, kv, table_rows, starts, valids, cfg,
     bids = jnp.where(
         write, jnp.take_along_axis(table_rows, (pos // bs) % R, axis=1), N)
     offs = pos % bs
-    kv = {
-        "k": kv["k"].at[bids, offs].set(k, mode="drop"),
-        "v": kv["v"].at[bids, offs].set(v, mode="drop"),
-    }
+    if quant:
+        kv = {
+            "k": kv["k"].at[bids, offs].set(qk, mode="drop"),
+            "v": kv["v"].at[bids, offs].set(qv, mode="drop"),
+            "k_scale": kv["k_scale"].at[bids, offs].set(sk, mode="drop"),
+            "v_scale": kv["v_scale"].at[bids, offs].set(sv, mode="drop"),
+        }
+    else:
+        kv = {
+            "k": kv["k"].at[bids, offs].set(k, mode="drop"),
+            "v": kv["v"].at[bids, offs].set(v, mode="drop"),
+        }
 
     # 3) attend: keys = each segment's pre-chunk ring ∪ its own chunk
     n_rep = h // hkv
@@ -416,8 +503,20 @@ def attention_decode(params, x, cache, index, cfg, *, window=None):
     q, k_new, v_new = _project_qkv(params, x, positions, cfg, window)
     Sc = cache["k"].shape[1]
     slot = index % Sc if window is not None else index      # ring buffer
-    k = cache["k"].at[:, slot].set(k_new[:, 0])
-    v = cache["v"].at[:, slot].set(v_new[:, 0])
+    if "k_scale" in cache:
+        qk, sk, qv, sv = _quantize_pair(k_new[:, 0], v_new[:, 0])
+        new_cache = {
+            "k": cache["k"].at[:, slot].set(qk),
+            "v": cache["v"].at[:, slot].set(qv),
+            "k_scale": cache["k_scale"].at[:, slot].set(sk),
+            "v_scale": cache["v_scale"].at[:, slot].set(sv),
+        }
+        k = dequantize_kv(new_cache["k"], new_cache["k_scale"]).astype(x.dtype)
+        v = dequantize_kv(new_cache["v"], new_cache["v_scale"]).astype(x.dtype)
+    else:
+        k = cache["k"].at[:, slot].set(k_new[:, 0])
+        v = cache["v"].at[:, slot].set(v_new[:, 0])
+        new_cache = {"k": k, "v": v}
     n_rep = h // hkv
     kk = _repeat_kv(k, n_rep)
     vv = _repeat_kv(v, n_rep)
@@ -435,4 +534,4 @@ def attention_decode(params, x, cache, index, cfg, *, window=None):
     p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(B, 1, h * hd)
     out = jnp.einsum("bsk,kd->bsd", out, params["wo"])
-    return out, {"k": k, "v": v}
+    return out, new_cache

@@ -60,8 +60,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.quantize import KVQuantConfig
 from repro.models import layers as L
 from repro.models import ssm as S
+
+
+# ------------------------------------------------------------- KV allocation
+def alloc_kv_pool(lead_shape, hkv: int, hd: int, dtype, kv_quant=None):
+    """THE allocator for K/V storage — block pools (lead (N, bs)) and dense
+    caches (lead (B, S)) alike; test_repo_lint.py bans ad-hoc pool dicts
+    elsewhere so every allocation stays quant-aware.
+
+    fp32 path: {"k", "v"} of lead + (hkv, hd) in `dtype`. With `kv_quant`:
+    values are int8 and {"k_scale", "v_scale"} f32 (lead + (hkv,)) carry one
+    dequant scale per stored vector. Downstream attention code dispatches on
+    the dict *structure* ("k_scale" in pool) — static at trace time, so no
+    signature changes ripple through the jitted steps."""
+    shape = tuple(lead_shape) + (hkv, hd)
+    if kv_quant is None:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    sshape = tuple(lead_shape) + (hkv,)
+    # scale 1.0 matches quantize_kv on an all-zero vector, so untouched
+    # slots dequantize to exactly 0.0
+    return {"k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.ones(sshape, jnp.float32),
+            "v_scale": jnp.ones(sshape, jnp.float32)}
 
 
 # ----------------------------------------------------------- layer kind lists
@@ -135,6 +159,7 @@ class _PagedPoolProvider:
     num_blocks: int
     block_size: int
     max_blocks_per_seq: Optional[int] = None
+    kv_quant: Optional[KVQuantConfig] = None
 
     # Preemption rollback: paged KV is rolled back by freeing blocks (and
     # re-aliasing registered ones on resume); there is no slot snapshot.
@@ -148,16 +173,30 @@ class _PagedPoolProvider:
 
     def init_layer_state(self):
         hkv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
-        dt = L.dtype_of(self.cfg)
-        return {
-            "k": jnp.zeros((self.num_blocks, self.block_size, hkv, hd), dt),
-            "v": jnp.zeros((self.num_blocks, self.block_size, hkv, hd), dt),
-        }
+        return alloc_kv_pool((self.num_blocks, self.block_size), hkv, hd,
+                             L.dtype_of(self.cfg), self.kv_quant)
+
+    def _bytes_per_token(self) -> int:
+        """KV bytes one stored token costs in this pool (both K and V)."""
+        hkv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
+        if self.kv_quant is not None:
+            return 2 * hkv * (hd + 4)   # int8 vector + one f32 scale per head
+        return 2 * hkv * hd * np.dtype(L.dtype_of(self.cfg)).itemsize
 
     def state_bytes_per_slot(self, total_tokens: int) -> int:
+        return (self.blocks_needed(total_tokens) * self.block_size
+                * self._bytes_per_token())
+
+    def pool_bytes_saved(self) -> int:
+        """Whole-pool HBM saved by quantization vs the fp32 layout (0 when
+        quantization is off) — feeds the kv_quant_bytes_saved_total gauge."""
+        if self.kv_quant is None:
+            return 0
         hkv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
         item = np.dtype(L.dtype_of(self.cfg)).itemsize
-        return self.blocks_needed(total_tokens) * self.block_size * 2 * hkv * hd * item
+        per_tok_fp = 2 * hkv * hd * item
+        return (self.num_blocks * self.block_size
+                * (per_tok_fp - self._bytes_per_token()))
 
     def defrag_remap(self, state, perm):
         """state leaves: (n_sb, N, bs, Hkv, hd); perm: new[i] = old[perm[i]]."""
@@ -286,12 +325,14 @@ def select_checkpoint(checkpoints, accepts, old):
 # ----------------------------------------------------------------- assembly
 def provider_for(skind: str, cfg: ModelConfig, *, num_blocks: int,
                  block_size: int, max_slots: int,
-                 max_blocks_per_seq: Optional[int] = None, draft: int = 0):
+                 max_blocks_per_seq: Optional[int] = None, draft: int = 0,
+                 kv_quant: Optional[KVQuantConfig] = None):
     if skind == "full":
-        return PagedKVProvider(cfg, num_blocks, block_size, max_blocks_per_seq)
+        return PagedKVProvider(cfg, num_blocks, block_size, max_blocks_per_seq,
+                               kv_quant)
     if skind == "ring":
         return RingKVProvider(cfg, num_blocks, block_size, max_blocks_per_seq,
-                              window=cfg.window_size, draft=draft)
+                              kv_quant, window=cfg.window_size, draft=draft)
     if skind in ("rwkv", "mamba"):
         return RecurrentSlabProvider(cfg, max_slots, skind)
     raise ValueError(f"unknown state kind {skind!r}")
@@ -299,10 +340,11 @@ def provider_for(skind: str, cfg: ModelConfig, *, num_blocks: int,
 
 def providers_for(cfg: ModelConfig, *, num_blocks: int, block_size: int,
                   max_slots: int, max_blocks_per_seq: Optional[int] = None,
-                  draft: int = 0):
+                  draft: int = 0, kv_quant: Optional[KVQuantConfig] = None):
     """One provider per layer of a superblock, aligned with layer_kinds(cfg).
     Layers of the same kind share a (frozen, equal) provider instance.
-    ``draft`` = K - 1 when speculative decoding is on (ring slack)."""
+    ``draft`` = K - 1 when speculative decoding is on (ring slack);
+    ``kv_quant`` switches the paged pools to int8 + per-vector scales."""
     cache = {}
     out = []
     for sk in state_kinds(cfg):
@@ -310,7 +352,7 @@ def providers_for(cfg: ModelConfig, *, num_blocks: int, block_size: int,
             cache[sk] = provider_for(
                 sk, cfg, num_blocks=num_blocks, block_size=block_size,
                 max_slots=max_slots, max_blocks_per_seq=max_blocks_per_seq,
-                draft=draft)
+                draft=draft, kv_quant=kv_quant)
         out.append(cache[sk])
     return out
 

@@ -223,12 +223,14 @@ def loss_fn(cfg: ModelConfig, params, batch):
 
 
 # --------------------------------------------------------------------- decode
-def _layer_cache(kind, cfg, batch, max_len):
+def _layer_cache(kind, cfg, batch, max_len, kv_quant=None):
     if kind in ("attn", "moe_attn", "global", "shared_attn"):
         window = cfg.window_size if cfg.attention_type == "sliding" else None
-        return A.init_kv_cache(cfg, batch, max_len, window=window)
+        return A.init_kv_cache(cfg, batch, max_len, window=window,
+                               kv_quant=kv_quant)
     if kind == "local":
-        return A.init_kv_cache(cfg, batch, max_len, window=cfg.window_size)
+        return A.init_kv_cache(cfg, batch, max_len, window=cfg.window_size,
+                               kv_quant=kv_quant)
     if kind == "rwkv":
         return S.init_rwkv6_state(cfg, batch)
     if kind == "mamba":
@@ -236,10 +238,11 @@ def _layer_cache(kind, cfg, batch, max_len):
     raise ValueError(kind)
 
 
-def init_decode_state(cfg: ModelConfig, batch, max_len):
+def init_decode_state(cfg: ModelConfig, batch, max_len, kv_quant=None):
     n_sb, _ = superblock_layout(cfg)
     kinds = _layer_kinds(cfg)
-    one = {f"l{i}": _layer_cache(k, cfg, batch, max_len) for i, k in enumerate(kinds)}
+    one = {f"l{i}": _layer_cache(k, cfg, batch, max_len, kv_quant)
+           for i, k in enumerate(kinds)}
     # stack per superblock
     return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape), one)
 
@@ -336,7 +339,7 @@ def prefill_step(cfg: ModelConfig, params, state, inputs):
 
 # -------------------------------------------------------------- paged decode
 def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     max_slots: int = None):
+                     max_slots: int = None, kv_quant=None):
     """Per-superblock, per-layer sequence state, built by the layer's state
     provider (see models.state_providers):
 
@@ -347,7 +350,10 @@ def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int,
       rwkv / mamba layers — per-slot recurrent slabs (n_sb, max_slots, ...);
         no block accounting at all.
 
-    `max_slots` is required whenever the config has recurrent layers."""
+    `max_slots` is required whenever the config has recurrent layers.
+    `kv_quant` (KVQuantConfig) switches the paged pools to int8 values with
+    per-vector f32 scales; the dict structure carries the mode so the jitted
+    steps dispatch statically."""
     kinds = _layer_kinds(cfg)
     skinds = SP.state_kinds(cfg)
     if any(k in ("rwkv", "mamba") for k in skinds) and max_slots is None:
@@ -355,7 +361,8 @@ def init_paged_state(cfg: ModelConfig, num_blocks: int, block_size: int,
     n_sb, _ = superblock_layout(cfg)
     providers = SP.providers_for(cfg, num_blocks=num_blocks,
                                  block_size=block_size,
-                                 max_slots=max_slots or 0)
+                                 max_slots=max_slots or 0,
+                                 kv_quant=kv_quant)
     one = {f"l{i}": p.init_layer_state() for i, p in enumerate(providers)}
     return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_sb,) + a.shape), one)
 

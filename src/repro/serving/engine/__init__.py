@@ -1,3 +1,4 @@
+from repro.kernels.quantize import KVQuantConfig
 from repro.serving.engine.engine import Engine, EngineConfig
 from repro.serving.engine.oversub import OversubConfig, SLOPolicy
 from repro.serving.engine.paged_cache import (BlockPool, BlockPoolError,
@@ -9,7 +10,8 @@ from repro.serving.engine.spec import (Drafter, DraftModelDrafter,
 from repro.serving.telemetry import (MetricsRegistry, RecompileTracker,
                                      RequestTracer, Telemetry)
 
-__all__ = ["Engine", "EngineConfig", "OversubConfig", "SLOPolicy",
+__all__ = ["Engine", "EngineConfig", "KVQuantConfig", "OversubConfig",
+           "SLOPolicy",
            "BlockPool", "BlockPoolError", "Request", "Scheduler",
            "prefix_hashes", "MetricsRegistry", "RecompileTracker",
            "RequestTracer", "Telemetry", "SpecConfig", "Drafter",

@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import parallelism as par
+from repro.kernels.quantize import KVQuantConfig
 from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import telemetry as TM
@@ -105,6 +106,9 @@ class EngineConfig:
     spec: Optional[SpecConfig] = None   # speculative decoding (engine.spec):
                                         #   k-token draft + multi-query verify
                                         #   replaces the one-token decode step
+    kv_quant: Optional[KVQuantConfig] = None  # int8 paged KV + per-vector f32
+                                        #   scales, dequantized inside the
+                                        #   paged Pallas kernels
 
     def __post_init__(self):
         # keep the config hashable for the compiled-step cache even when a
@@ -196,7 +200,8 @@ def _step_fn_key(e: EngineConfig) -> EngineConfig:
     come from the call-time arrays — so normalize them out of the
     compile-cache key and toggling them reuses the compiled steps. Of the
     spec config only k matters (it sets the ring modulus and the verify
-    tokens width); the drafter is pure host state."""
+    tokens width); the drafter is pure host state. ``kv_quant`` stays in the
+    key: it changes the pool pytree structure the steps are traced with."""
     spec = SpecConfig(k=e.spec.k) if e.spec is not None else None
     return dataclasses.replace(e, prefix_caching=True, prefills_per_step=1,
                                telemetry=True, step_timing=False,
@@ -231,7 +236,8 @@ class Engine:
         self.providers = SP.providers_for(
             cfg, num_blocks=e.num_blocks, block_size=e.block_size,
             max_slots=e.max_slots, max_blocks_per_seq=e.max_blocks_per_seq,
-            draft=e.spec.k - 1 if e.spec is not None else 0)
+            draft=e.spec.k - 1 if e.spec is not None else 0,
+            kv_quant=e.kv_quant)
         self.state_kinds = [p.kind for p in self.providers]
         self._has_recurrent = any(k in ("rwkv", "mamba")
                                   for k in self.state_kinds)
@@ -304,7 +310,17 @@ class Engine:
             "engine_request_e2e_seconds", "arrive -> finish")
 
         self.pool_state = T.init_paged_state(cfg, e.num_blocks, e.block_size,
-                                             max_slots=e.max_slots)
+                                             max_slots=e.max_slots,
+                                             kv_quant=e.kv_quant)
+        # HBM the int8 pools free up vs the fp32 layout (whole pool, all
+        # layers and superblocks; 0 with quantization off)
+        n_sb, _ = SP.superblock_layout(cfg)
+        self._g_kv_quant_saved = reg.gauge(
+            "kv_quant_bytes_saved_total",
+            "pool bytes saved by KV quantization vs fp32 layout")
+        self._g_kv_quant_saved.set(n_sb * sum(
+            getattr(p, "pool_bytes_saved", lambda: 0)()
+            for p in self.providers))
         on_evict = ((lambda b: self.telemetry.record(None, "evict", block=b))
                     if self.telemetry.enabled else None)
         self.block_pool = BlockPool(e.num_blocks, e.block_size,

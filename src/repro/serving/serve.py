@@ -74,17 +74,19 @@ def sample(logits, key, temperature=1.0):
 
 
 def generate(cfg, params, prompt_tokens, max_new, *, key=None, temperature=0.0,
-             max_len=None, prefill_mode="auto"):
+             max_len=None, prefill_mode="auto", kv_quant=None):
     """Greedy/temperature generation for token-input models.
 
     Prefill fills the whole prompt cache in ONE jitted call (`prefill_step`)
     instead of S0 sequential decode steps; `prefill_mode="loop"` keeps the
     old token-by-token path as a reference oracle ("auto" falls back to it
-    for recurrent families without a batched prefill)."""
+    for recurrent families without a batched prefill). ``kv_quant`` stores
+    the dense KV caches int8 + per-vector scales — the non-paged reference
+    the quantized engine must match token-for-token."""
     key = key if key is not None else jax.random.PRNGKey(0)
     B, S0 = prompt_tokens.shape
     max_len = max_len or (S0 + max_new)
-    cache = T.init_decode_state(cfg, B, max_len)
+    cache = T.init_decode_state(cfg, B, max_len, kv_quant=kv_quant)
     step = _cached_decode_step(cfg)
 
     if prefill_mode not in ("auto", "batched", "loop"):

@@ -110,3 +110,48 @@ class TestQuantizeSweep:
         q, s = quantize_blocks(flat, jax.random.PRNGKey(0))
         deq = dequantize_blocks(q, s, n=512)
         assert bool(jnp.all(deq == 0))
+
+    def test_nearest_deterministic_without_key(self):
+        """mode='nearest' needs no PRNG key (the serving KV path runs inside
+        jitted engine steps with no key plumbing) and is a pure function of
+        the input."""
+        flat = jax.random.normal(jax.random.PRNGKey(7), (4096,)) * 0.05
+        q1, s1 = quantize_blocks(flat, mode="nearest")
+        q2, s2 = quantize_blocks(flat, mode="nearest")
+        assert bool(jnp.all(q1 == q2)) and bool(jnp.all(s1 == s2))
+        # kernel matches the nearest-mode reference exactly
+        x = flat.reshape(-1, 256)
+        qr, sr = quantize_blocks_ref(x, bits=8, mode="nearest")
+        assert bool(jnp.all(q1 == qr))
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(sr), rtol=1e-6)
+
+    def test_nearest_tighter_roundtrip_than_stochastic(self):
+        """Nearest rounding halves the worst-case round-trip error: per
+        element <= scale/2, where the stochastic path only guarantees
+        <= scale (its expectation, not its max, is exact)."""
+        key = jax.random.PRNGKey(11)
+        flat = jax.random.normal(key, (8192,))
+        qn, sn = quantize_blocks(flat, mode="nearest")
+        err_n = jnp.abs(dequantize_blocks(qn, sn, n=8192) - flat)
+        per_block = jnp.repeat(sn, 256)[:8192]
+        assert bool(jnp.all(err_n <= per_block / 2 + 1e-6))
+        qs, ss = quantize_blocks(flat, key)
+        err_s = jnp.abs(dequantize_blocks(qs, ss, n=8192) - flat)
+        assert bool(jnp.all(err_s <= jnp.repeat(ss, 256)[:8192] + 1e-6))
+
+    def test_stochastic_requires_key(self):
+        with pytest.raises(ValueError):
+            quantize_blocks(jnp.zeros((256,)))
+
+    def test_kv_quant_roundtrip(self):
+        """The per-vector KV quantizer: nearest, per-(token, head) scales
+        over head_dim, exact zeros, error <= scale/2."""
+        from repro.kernels.quantize import dequantize_kv, quantize_kv
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 16, 2, 64))
+        q, s = quantize_kv(x)
+        assert q.dtype == jnp.int8 and s.shape == x.shape[:-1]
+        err = jnp.abs(dequantize_kv(q, s) - x)
+        assert bool(jnp.all(err <= s[..., None] / 2 + 1e-6))
+        qz, sz = quantize_kv(jnp.zeros((2, 8, 2, 64)))
+        assert bool(jnp.all(qz == 0)) and bool(jnp.all(sz == 1.0))
+        assert bool(jnp.all(dequantize_kv(qz, sz) == 0))

@@ -1,0 +1,199 @@
+"""Quantized paged KV: int8 pools + per-(token, head) f32 scales,
+dequantized inside the paged attention kernels (`EngineConfig.kv_quant`).
+
+The load-bearing guarantee mirrors every other engine feature: greedy
+outputs through the quantized ENGINE are bit-identical to the quantized
+NON-PAGED reference (`serve.generate(kv_quant=...)`) — quantization changes
+the numbers (boundedly, vs fp32), but paging, prefix-cache hits, preemption
+and chunked prefill must not change them further. Memory acceptance: the
+full-attention per-slot state budget drops to <=0.6x fp32 (measured ~0.27x:
+2*hkv*(hd+4) vs 2*hkv*hd*4 bytes per token), and the engine's
+`kv_quant_bytes_saved_total` gauge reports exactly the pool-layout delta.
+All CPU (`pytest -m kv_quant`, subset of `-m serving`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import state_providers as SP
+from repro.models import transformer as T
+from repro.serving import serve
+from repro.serving.engine import Engine, EngineConfig, KVQuantConfig
+
+pytestmark = [pytest.mark.serving, pytest.mark.kv_quant]
+
+KVQ_FAMILIES = ("full", "sliding", "hybrid")   # ssm holds no KV to quantize
+
+
+def _model_cfg(family):
+    base = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=50, loss_chunk=16,
+                attn_chunk=16, remat=False, dtype="float32")
+    if family == "full":
+        return ModelConfig(name="kvq-full", family="dense", **base)
+    if family == "sliding":
+        return ModelConfig(name="kvq-sliding", family="dense",
+                           attention_type="sliding", window_size=4, **base)
+    if family == "hybrid":
+        return ModelConfig(name="kvq-hybrid", family="hybrid",
+                           hybrid_ssm_per_attn=1, ssm_state_dim=8,
+                           ssm_head_dim=16, **base)
+    raise ValueError(family)
+
+
+@pytest.fixture(scope="module", params=KVQ_FAMILIES)
+def fam_setup(request):
+    cfg = _model_cfg(request.param)
+    return request.param, cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **kw):
+    base = dict(block_size=4, num_blocks=64, max_blocks_per_seq=8,
+                max_slots=4, prefill_chunk=8, kv_quant=KVQuantConfig())
+    base.update(kw)
+    return Engine(cfg, params, EngineConfig(**base))
+
+
+def _ref(cfg, params, prompt, max_new, kv_quant=None):
+    return np.asarray(serve.generate(cfg, params, jnp.asarray(prompt)[None],
+                                     max_new=max_new, temperature=0.0,
+                                     kv_quant=kv_quant))[0]
+
+
+def _prompts(n, seed=0, lo=3, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 50, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n)]
+
+
+class TestQuantConfig:
+    def test_only_int8_supported(self):
+        with pytest.raises(ValueError):
+            KVQuantConfig(bits=4)
+        assert KVQuantConfig().bits == 8
+
+    def test_hashable_for_step_fn_cache(self):
+        assert hash(KVQuantConfig()) == hash(KVQuantConfig(bits=8))
+
+
+class TestEngineBitIdentity:
+    def test_family_bit_identical_to_quantized_serve(self, fam_setup):
+        """Acceptance: the quantized engine's greedy outputs equal the
+        quantized dense reference across families, with staggered arrivals
+        so chunked prefill and decode interleave."""
+        family, cfg, params = fam_setup
+        kvq = KVQuantConfig()
+        eng = _engine(cfg, params)
+        prompts, max_new = _prompts(5, seed=2), 10
+        rids = []
+        for p in prompts:
+            rids.append(eng.add_request(p, max_new))
+            eng.step()
+        outs = eng.drain()
+        for rid, p in zip(rids, prompts):
+            np.testing.assert_array_equal(
+                outs[rid], _ref(cfg, params, p, max_new, kv_quant=kvq),
+                err_msg=f"family={family} rid={rid}")
+        assert eng.block_pool.num_free == eng.ecfg.num_blocks
+
+    def test_zero_new_decode_variants_past_warmup(self, fam_setup):
+        """Quant changes the traced pool pytree, so the AOT warmup must have
+        compiled the quantized shapes — a second trace at serving time is a
+        recompile regression."""
+        family, cfg, params = fam_setup
+        eng = _engine(cfg, params)
+        for p in _prompts(4, seed=5):
+            eng.add_request(p, 8)
+        eng.drain()
+        v = eng.telemetry.recompiles.variants()
+        assert v.get("decode") == 1, f"family={family}: {v}"
+        declared = len(eng.prefill_grid)
+        assert eng.telemetry.recompiles.unique("prefill") <= declared
+
+    def test_prefix_cache_hits_bit_identical(self):
+        """Shared prefix blocks are reused read-only under quant: the scales
+        travel with the block (same (N, bs, Hkv) indexing), so a cache hit
+        replays EXACTLY the bytes the first request wrote — outputs equal
+        the quantized dense reference, which never shares anything."""
+        cfg = _model_cfg("full")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        kvq = KVQuantConfig()
+        eng = _engine(cfg, params, prefix_caching=True)
+        rng = np.random.default_rng(9)
+        prefix = rng.integers(0, 50, size=12).astype(np.int32)
+        prime = eng.add_request(prefix, 1)        # populate the prefix index
+        eng.drain()
+        prompts = [np.concatenate([prefix,
+                                   rng.integers(0, 50, size=int(t))
+                                   .astype(np.int32)])
+                   for t in rng.integers(2, 6, size=3)]
+        rids = [eng.add_request(p, 8) for p in prompts]
+        outs = eng.drain()
+        assert eng.stats["prefix_hit_tokens"] > 0
+        for rid, p in zip(rids, prompts):
+            np.testing.assert_array_equal(
+                outs[rid], _ref(cfg, params, p, 8, kv_quant=kvq),
+                err_msg=f"rid={rid}")
+
+
+class TestMemoryAccounting:
+    def test_state_bytes_per_slot_under_0p6x(self):
+        """ISSUE acceptance: full-attention per-slot state <=0.6x fp32."""
+        cfg = _model_cfg("full")
+        for worst in (32, 128):
+            byt = {}
+            for tag, q in (("fp32", None), ("int8", KVQuantConfig())):
+                provs = SP.providers_for(cfg, num_blocks=64, block_size=4,
+                                         max_slots=4, max_blocks_per_seq=32,
+                                         kv_quant=q)
+                byt[tag] = SP.state_memory_per_slot(cfg, provs, worst)
+            ratio = byt["int8"] / byt["fp32"]
+            assert ratio <= 0.6, f"worst={worst}: {ratio:.3f}"
+
+    def test_bytes_saved_gauge_matches_layout_delta(self, fam_setup):
+        family, cfg, params = fam_setup
+        eng = _engine(cfg, params)
+        saved = eng.telemetry.registry.snapshot()["kv_quant_bytes_saved_total"]
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        per_tok = 2 * hkv * hd * 4 - 2 * hkv * (hd + 4)
+        n_sb, _ = SP.superblock_layout(cfg)
+        pooled = sum(1 for p in eng.providers
+                     if getattr(p, "kv_quant", None) is not None)
+        want = n_sb * pooled * 64 * 4 * per_tok    # num_blocks * block_size
+        assert saved == want > 0
+
+    def test_fp32_engine_reports_zero_saved(self):
+        cfg = _model_cfg("full")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        eng = _engine(cfg, params, kv_quant=None)
+        assert eng.telemetry.registry.snapshot()[
+            "kv_quant_bytes_saved_total"] == 0
+
+
+class TestBoundedDrift:
+    @pytest.mark.parametrize("family", ["full", "sliding"])
+    def test_logit_drift_vs_fp32_bounded(self, family):
+        """int8 KV is lossy vs fp32 but boundedly so: teacher-forcing the
+        fp32 greedy stream through both caches, the worst logit deviation
+        stays ~100x below the logit scale (measured ~0.03 on these shapes;
+        bound 0.25 vs max-logit ~2.5). Greedy TOKENS may still differ — the
+        bit-identity contract is engine-vs-quantized-reference, never
+        quant-vs-fp32."""
+        cfg = _model_cfg(family)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, 50, size=(2, 12)), jnp.int32)
+        cf = T.init_decode_state(cfg, 2, 32)
+        cq = T.init_decode_state(cfg, 2, 32, kv_quant=KVQuantConfig())
+        lf, cf = T.prefill_step(cfg, params, cf, {"tokens": toks})
+        lq, cq = T.prefill_step(cfg, params, cq, {"tokens": toks})
+        drift = [float(jnp.max(jnp.abs(lf - lq)))]
+        for j in range(8):
+            t = jnp.argmax(lf, -1).astype(jnp.int32)
+            lf, cf = T.decode_step(cfg, params, cf, {"token": t},
+                                   jnp.int32(12 + j))
+            lq, cq = T.decode_step(cfg, params, cq, {"token": t},
+                                   jnp.int32(12 + j))
+            drift.append(float(jnp.max(jnp.abs(lf - lq))))
+        assert 0 < max(drift) < 0.25, f"drift={max(drift)}"

@@ -22,7 +22,8 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.serving import serve
 from repro.serving.engine import (BlockPool, Engine, EngineConfig,
-                                  OversubConfig, SLOPolicy, prefix_hashes)
+                                  KVQuantConfig, OversubConfig, SLOPolicy,
+                                  prefix_hashes)
 from repro.serving.engine.scheduler import DECODING, Request
 from repro.serving.telemetry import (Event, TelemetryError, derive_timeline,
                                      validate_order)
@@ -279,9 +280,10 @@ def _engine(cfg, params, **kw):
     return Engine(cfg, params, EngineConfig(**base))
 
 
-def _ref(cfg, params, prompt, max_new):
+def _ref(cfg, params, prompt, max_new, kv_quant=None):
     return np.asarray(serve.generate(cfg, params, jnp.asarray(prompt)[None],
-                                     max_new=max_new, temperature=0.0))[0]
+                                     max_new=max_new, temperature=0.0,
+                                     kv_quant=kv_quant))[0]
 
 
 def _prompts(n, seed=0, lo=3, hi=14):
@@ -327,6 +329,39 @@ class TestForcedPreemptionSoak:
             evs = eng.telemetry.tracer.request_events(rid)
             validate_order(evs)
             assert derive_timeline(evs)["preempts"] == eng.requests[rid].preempts
+        assert eng.block_pool.num_free == eng.ecfg.num_blocks
+        eng.block_pool.check()
+
+    @pytest.mark.kv_quant
+    def test_quantized_kv_forced_preemption_bit_identical(self, fam_setup):
+        """The same forced-eviction soak with int8 paged KV: rollback and
+        resume re-quantize the SAME token values the dense quantized
+        reference stores (nearest rounding is deterministic), so greedy
+        outputs still match `serve.generate(kv_quant=...)` bit-for-bit and
+        the decode step stays at its single AOT-warmed variant."""
+        family, cfg, params = fam_setup
+        kvq = KVQuantConfig()
+        eng = _engine(cfg, params, kv_quant=kvq)
+        prompts, max_new = _prompts(4, seed=3), 10
+        rids = [eng.add_request(p, max_new) for p in prompts]
+        pending, steps = list(rids), 0
+        while pending and steps < 200:
+            eng.step()
+            steps += 1
+            for rid in list(pending):
+                req = eng.requests[rid]
+                if (req.state == DECODING
+                        and len(req.out_tokens) >= rids.index(rid) + 1):
+                    assert eng.preempt_request(rid)
+                    pending.remove(rid)
+        assert not pending, "not every request reached its eviction point"
+        outs = eng.drain()
+        for rid, p in zip(rids, prompts):
+            np.testing.assert_array_equal(
+                outs[rid], _ref(cfg, params, p, max_new, kv_quant=kvq),
+                err_msg=f"family={family} rid={rid}")
+        assert eng.stats["preemptions"] >= len(rids)
+        assert eng.telemetry.recompiles.variants().get("decode") == 1
         assert eng.block_pool.num_free == eng.ecfg.num_blocks
         eng.block_pool.check()
 

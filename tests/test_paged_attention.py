@@ -5,7 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ref,
+                                           paged_attention_verify,
+                                           paged_attention_verify_ref)
+from repro.kernels.quantize import dequantize_kv, quantize_kv
+from repro.models import state_providers as SP
 
 pytestmark = pytest.mark.serving
 
@@ -89,3 +94,112 @@ class TestPagedAttentionSweep:
         p = jax.nn.softmax(s, axis=-1)
         ref = jnp.einsum("bhk,bkhd->bhd", p, vv)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ------------------------------------------------- int8 pools + scales
+def _quantize_pools(kp, vp):
+    qk, sk = quantize_kv(kp)
+    qv, sv = quantize_kv(vp)
+    return qk, qv, dict(k_scale=sk, v_scale=sv)
+
+
+@pytest.mark.kv_quant
+class TestQuantizedPagedAttention:
+    """int8 pools + per-(token, head) scales, dequantized inside the kernel:
+    every mode (full / ring / verify / ring-verify) must match the quantized
+    reference, and the reference with scales must equal the reference run on
+    an explicitly dequantized fp32 pool bit-for-bit (the scales are pure
+    layout, not new math)."""
+
+    def _full_case(self, k=None):
+        B, H, Hkv, hd, N, bs, P = 3, 4, 2, 64, 24, 8, 4
+        lens = [1, bs * P, bs + 3]
+        if k is None:
+            return _random_case(jax.random.PRNGKey(0), B, H, Hkv, hd, N, bs,
+                                P, jnp.float32, lens)
+        q, kp, vp, tables, lens = _random_case(
+            jax.random.PRNGKey(0), B, H, Hkv, hd, N, bs, P, jnp.float32,
+            [max(l, k) for l in lens])
+        q = jax.random.normal(jax.random.PRNGKey(1), (B, k, H, hd))
+        return q, kp, vp, tables, lens
+
+    def _ring_case(self, k=None):
+        B, H, Hkv, hd, bs, window = 3, 4, 2, 32, 4, 6
+        K = 1 if k is None else k
+        R = SP.ring_pages(window, bs, draft=K - 1)
+        N = B * R + 2
+        lens = [K, 2 * bs + 1, 6 * bs]          # fresh / 2nd page / deep wrap
+        q, kp, vp, tables, lens = _random_case(
+            jax.random.PRNGKey(2), B, H, Hkv, hd, N, bs, R, jnp.float32,
+            lens)
+        if k is not None:
+            q = jax.random.normal(jax.random.PRNGKey(3), (B, k, H, hd))
+        pos = jnp.maximum(lens - 1, 0)
+        return q, kp, vp, tables, lens, dict(window=window, positions=pos,
+                                             ring_pages=R)
+
+    @pytest.mark.parametrize("mode", ["full", "ring", "verify",
+                                      "ring_verify"])
+    def test_quant_kernel_vs_quant_ref(self, mode):
+        if mode == "full":
+            q, kp, vp, tables, lens = self._full_case()
+            kw, op, rf = {}, paged_attention, paged_attention_ref
+        elif mode == "ring":
+            q, kp, vp, tables, lens, kw = self._ring_case()
+            op, rf = paged_attention, paged_attention_ref
+        elif mode == "verify":
+            q, kp, vp, tables, lens = self._full_case(k=4)
+            kw, op, rf = {}, paged_attention_verify, paged_attention_verify_ref
+        else:
+            q, kp, vp, tables, lens, kw = self._ring_case(k=4)
+            op, rf = paged_attention_verify, paged_attention_verify_ref
+        qk, qv, scales = _quantize_pools(kp, vp)
+        out = op(q, qk, qv, tables, lens, **scales, **kw)
+        ref = rf(q, qk, qv, tables, lens, **scales, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("mode", ["full", "ring"])
+    def test_ref_scales_equals_dequantized_pool(self, mode):
+        if mode == "full":
+            q, kp, vp, tables, lens = self._full_case()
+            kw = {}
+        else:
+            q, kp, vp, tables, lens, kw = self._ring_case()
+        qk, qv, scales = _quantize_pools(kp, vp)
+        with_scales = paged_attention_ref(q, qk, qv, tables, lens, **scales,
+                                          **kw)
+        on_dequant = paged_attention_ref(
+            q, dequantize_kv(qk, scales["k_scale"]),
+            dequantize_kv(qv, scales["v_scale"]), tables, lens, **kw)
+        np.testing.assert_array_equal(np.asarray(with_scales),
+                                      np.asarray(on_dequant))
+
+    def test_garbage_blocks_and_scales_masked(self):
+        """Stale blocks past seq_len may hold garbage VALUES AND SCALES from
+        freed sequences — both must be masked out."""
+        B, H, Hkv, hd, N, bs, P = 1, 2, 2, 32, 6, 4, 3
+        q, kp, vp, tables, lens = _random_case(
+            jax.random.PRNGKey(7), B, H, Hkv, hd, N, bs, P, jnp.float32, [6])
+        qk, qv, scales = _quantize_pools(kp, vp)
+        out1 = paged_attention(q, qk, qv, tables, lens, **scales)
+        qk2 = qk.at[tables[0, 1], 2:].set(127).at[tables[0, 2]].set(127)
+        qv2 = qv.at[tables[0, 1], 2:].set(127).at[tables[0, 2]].set(127)
+        poisoned = {
+            n: s.at[tables[0, 1], 2:].set(1e6).at[tables[0, 2]].set(1e6)
+            for n, s in scales.items()}
+        for fn in (paged_attention, paged_attention_ref):
+            out2 = fn(q, qk2, qv2, tables, lens, **poisoned)
+            np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                       atol=1e-6)
+
+    def test_inactive_slot_outputs_zero_quant(self):
+        B, H, Hkv, hd, N, bs, P = 2, 4, 2, 32, 8, 4, 2
+        q, kp, vp, tables, lens = _random_case(
+            jax.random.PRNGKey(4), B, H, Hkv, hd, N, bs, P, jnp.float32,
+            [5, 0])
+        qk, qv, scales = _quantize_pools(kp, vp)
+        for out in (paged_attention(q, qk, qv, tables, lens, **scales),
+                    paged_attention_ref(q, qk, qv, tables, lens, **scales)):
+            assert bool(jnp.all(out[1] == 0))
+            assert bool(jnp.all(jnp.isfinite(out)))

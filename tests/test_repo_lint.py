@@ -10,6 +10,13 @@ refcount/prefix-index invariants that preemption's register-then-evict
 discipline depends on — callers get alloc/append/share/evict_seq/free_seq,
 never the books.
 
+Quantized KV adds a fenced allocator: KV pool/cache leaves ("k", "v" and
+their "_scale" companions) may only be materialized by
+``state_providers.alloc_kv_pool``, which picks the int8+scales or fp32
+layout from the one ``KVQuantConfig``. A raw ``jnp.zeros`` KV dict anywhere
+else in models/ or serving/ silently hard-codes the fp32 layout and
+desyncs from ``state_bytes_per_slot`` accounting the moment quant is on.
+
 Speculative decoding adds two more fenced stores: per-request draft cursors
 (``_draft_state``, owned by the drafters in engine/spec.py) and the verify
 scan's recurrent rollback checkpoints (selected only by
@@ -82,6 +89,53 @@ def test_no_pool_internal_access_outside_paged_cache():
         "direct pool-internal access found (use the BlockPool API — "
         "alloc/append/share/register/evict_seq/free_seq):\n"
         + "\n".join(offenders))
+
+
+# KV pool/cache leaves born outside the quant-aware allocator: a dict
+# literal ('"k": jnp.zeros(...)') or dict() kwarg ('k=jnp.zeros(...)', no
+# spaces per keyword style) allocating any of the four KV leaf names.
+# Spaced local assignments ('k = jnp.zeros(...)') and non-KV leaves
+# ('"ln_scale": jnp.ones') don't match.
+_KV_POOL_ALLOC = re.compile(
+    r"""["'](?:k|v|k_scale|v_scale)["']\s*:\s*jnp\.(?:zeros|ones|empty|full)\b"""
+    r"|[(,\s](?:k|v|k_scale|v_scale)=jnp\.(?:zeros|ones|empty|full)\(")
+_KV_ALLOC_ALLOWED = ("state_providers.py",)
+
+
+def test_kv_pool_allocation_only_in_state_providers():
+    """Every KV pool/cache must come from state_providers.alloc_kv_pool —
+    the single place that knows whether the layout is fp32 or int8+scales
+    (EngineConfig.kv_quant)."""
+    offenders = []
+    for root in (SERVING, MODELS):
+        assert root.is_dir()
+        for path in sorted(root.rglob("*.py")):
+            if path.name in _KV_ALLOC_ALLOWED:
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if _KV_POOL_ALLOC.search(line):
+                    offenders.append(f"{path.relative_to(root.parent)}:"
+                                     f"{lineno}: {line.strip()}")
+    assert not offenders, (
+        "raw KV pool/cache allocation found (use "
+        "state_providers.alloc_kv_pool, the quant-aware layout owner):\n"
+        + "\n".join(offenders))
+
+
+def test_kv_alloc_lint_regex_catches_the_banned_patterns():
+    bad = ['return {"k": jnp.zeros(shape), "v": jnp.zeros(shape)}',
+           "cache = dict(k=jnp.zeros(s), v=jnp.zeros(s))",
+           '{"k_scale": jnp.ones(lead + (hkv,), jnp.float32)}',
+           "pool = {'v_scale': jnp.full(s, 1.0)}"]
+    good = ['"ln_scale": jnp.ones((H, hd), jnp.float32),',
+            "k = jnp.zeros((4, 4))",
+            'cache["k"] = quantized',
+            '{"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}',
+            "kv = dict(k=new_k, v=new_v)"]
+    for s in bad:
+        assert _KV_POOL_ALLOC.search(s), s
+    for s in good:
+        assert not _KV_POOL_ALLOC.search(s), s
 
 
 _SPEC_STATE = re.compile(r"\._draft_state\b|select_checkpoint\s*\(")

@@ -20,8 +20,9 @@ from repro.kernels.paged_attention import (paged_attention_ref,
 from repro.models import state_providers as SP
 from repro.models import transformer as T
 from repro.serving import serve
-from repro.serving.engine import (Drafter, Engine, EngineConfig, NgramDrafter,
-                                  OversubConfig, ReplayDrafter, SpecConfig)
+from repro.serving.engine import (Drafter, Engine, EngineConfig,
+                                  KVQuantConfig, NgramDrafter, OversubConfig,
+                                  ReplayDrafter, SpecConfig)
 from repro.serving.engine import spec as SPEC
 from repro.serving.engine.scheduler import DECODING
 from repro.serving.telemetry import derive_timeline, validate_order
@@ -346,9 +347,10 @@ def _engine(cfg, params, **kw):
     return Engine(cfg, params, EngineConfig(**base))
 
 
-def _ref(cfg, params, prompt, max_new):
+def _ref(cfg, params, prompt, max_new, kv_quant=None):
     return np.asarray(serve.generate(cfg, params, jnp.asarray(prompt)[None],
-                                     max_new=max_new, temperature=0.0))[0]
+                                     max_new=max_new, temperature=0.0,
+                                     kv_quant=kv_quant))[0]
 
 
 def _prompts(n, seed=0, lo=3, hi=14):
@@ -404,6 +406,39 @@ class TestSpecEngine:
         assert eng.telemetry.recompiles.variants().get("verify") == 1
         for rid in rids:
             validate_order(eng.telemetry.tracer.request_events(rid))
+        assert eng.block_pool.num_free == eng.ecfg.num_blocks
+        eng.block_pool.check()
+
+    @pytest.mark.kv_quant
+    def test_quantized_kv_spec_soak_bit_identical(self, fam_setup):
+        """Speculation over int8 paged KV, with every request force-evicted
+        mid-decode: the verify kernel dequantizes in-register, rejected
+        drafts roll back by seq_lens alone (their quantized writes beyond the
+        bound are masked), and greedy outputs still match the quantized
+        dense reference bit-for-bit with zero verify variants past warmup."""
+        family, cfg, params = fam_setup
+        kvq = KVQuantConfig()
+        eng = _engine(cfg, params, oversub=OversubConfig(), kv_quant=kvq)
+        prompts, max_new = _prompts(4, seed=7), 10
+        rids = [eng.add_request(p, max_new) for p in prompts]
+        pending, steps = list(rids), 0
+        while pending and steps < 200:
+            eng.step()
+            steps += 1
+            for rid in list(pending):
+                req = eng.requests[rid]
+                if (req.state == DECODING
+                        and len(req.out_tokens) >= rids.index(rid) + 1):
+                    assert eng.preempt_request(rid)
+                    pending.remove(rid)
+        assert not pending, "not every request reached its eviction point"
+        outs = eng.drain()
+        for rid, p in zip(rids, prompts):
+            np.testing.assert_array_equal(
+                outs[rid], _ref(cfg, params, p, max_new, kv_quant=kvq),
+                err_msg=f"family={family} rid={rid}")
+        assert eng.stats["preemptions"] >= len(rids)
+        assert eng.telemetry.recompiles.variants().get("verify") == 1
         assert eng.block_pool.num_free == eng.ecfg.num_blocks
         eng.block_pool.check()
 
